@@ -1,0 +1,106 @@
+"""Paper Fig. 6 / §5.1 — multiplication accuracy of R2F2 vs fixed formats.
+
+Protocol follows the paper: operands swept over (0.0001, 10000), divided
+into intervals, 1000 random pairs each; absolute error vs the 32-bit
+product; overflow counted as 100% error ("errors are cast to 100% if
+overflow happens"); error reduction of k-bit R2F2 vs its fixed-format
+counterpart (E5M10 / E5M9 / E5M8). The paper reports 70.2 / 70.6 / 70.7%
+average reductions — the in-range reduction is the comparable number; the
+with-overflow reduction is larger because fixed formats overflow above
+65504 while R2F2 reconfigures.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FlexFormat, quantize_em, r2f2_multiply
+
+CONFIGS = [
+    ("r2f2_16<3,9,3>", FlexFormat(3, 9, 3), (5, 10), "E5M10"),
+    ("r2f2_15<3,8,3>", FlexFormat(3, 8, 3), (5, 9), "E5M9"),
+    ("r2f2_14<3,7,3>", FlexFormat(3, 7, 3), (5, 8), "E5M8"),
+]
+
+N_INTERVALS = 400  # log-spaced intervals over (1e-4, 1e4)
+PER_INTERVAL = 1000
+
+
+def _sample_operands(rng):
+    edges = np.logspace(-4, 4, N_INTERVALS + 1)
+    lo = edges[:-1][:, None]
+    hi = edges[1:][:, None]
+    a = rng.uniform(lo, hi, (N_INTERVALS, PER_INTERVAL)).astype(np.float32)
+    b = rng.uniform(lo, hi, (N_INTERVALS, PER_INTERVAL)).astype(np.float32)
+    return a.reshape(-1), b.reshape(-1)
+
+
+def _fixed_mul(a, b, e, m):
+    qa = quantize_em(a, e, m)
+    qb = quantize_em(b, e, m)
+    return np.asarray(quantize_em(np.asarray(qa) * np.asarray(qb), e, m))
+
+
+def run():
+    rng = np.random.default_rng(42)
+    a, b = _sample_operands(rng)
+    exact = a.astype(np.float64) * b.astype(np.float64)
+
+    rows = []
+    for name, fmt, (e, m), fixed_name in CONFIGS:
+        t0 = time.perf_counter()
+        p_rr, stats = r2f2_multiply(a, b, fmt, tile_shape=(PER_INTERVAL,))
+        p_rr = np.asarray(p_rr, np.float64)
+        us = (time.perf_counter() - t0) * 1e6 / a.size
+
+        p_fx = _fixed_mul(a, b, e, m).astype(np.float64)
+
+        rel_rr = np.abs(p_rr - exact) / np.abs(exact)
+        ovf_fx = ~np.isfinite(p_fx)
+        rel_fx = np.where(ovf_fx, 1.0, np.abs(np.where(ovf_fx, 0.0, p_fx) - exact) / np.abs(exact))
+
+        red_all = (1.0 - rel_rr.mean() / rel_fx.mean()) * 100.0
+        inr = ~ovf_fx & (np.abs(exact) > 1.2e-4)  # both representable
+        red_inr = (1.0 - rel_rr[inr].mean() / rel_fx[inr].mean()) * 100.0
+        red_max = (1.0 - (rel_rr[inr] + 1e-12) / (rel_fx[inr] + 1e-12)).max() * 100.0
+
+        rows.append(
+            dict(
+                name=name,
+                fixed=fixed_name,
+                us_per_call=us,
+                rr_mean_err_pct=rel_rr.mean() * 100,
+                fixed_mean_err_pct=rel_fx.mean() * 100,
+                reduction_incl_overflow_pct=red_all,
+                reduction_in_range_pct=red_inr,
+                reduction_max_pct=red_max,
+                fixed_overflow_frac=ovf_fx.mean(),
+            )
+        )
+    return rows
+
+
+def main():
+    print("# paper Fig. 6 — R2F2 vs fixed-format multiplication error")
+    print("# paper claims: avg error reduction 70.2% (16b), 70.6% (15b), 70.7% (14b); max 99.9%")
+    print("# note: the paper's averaging convention is unspecified; we report")
+    print("#   ratio-of-means incl. overflow-as-100% (our R2F2 never overflows in the")
+    print("#   sweep -> 99+%), and the in-range-only ratio. Qualitative claim (R2F2")
+    print("#   strictly dominates equal-width fixed formats) reproduces under all of them.")
+    for r in run():
+        print(
+            f"mul_accuracy/{r['name']},{r['us_per_call']:.3f},"
+            f"in_range_reduction={r['reduction_in_range_pct']:.1f}%"
+            f";incl_overflow={r['reduction_incl_overflow_pct']:.1f}%"
+            f";max={r['reduction_max_pct']:.1f}%"
+            f";fixed_{r['fixed']}_err={r['fixed_mean_err_pct']:.4f}%"
+            f";rr_err={r['rr_mean_err_pct']:.4f}%"
+            f";fixed_overflow_frac={r['fixed_overflow_frac']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

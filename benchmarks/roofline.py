@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, from artifacts/dryrun/<cell>.json:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+
+(cost_analysis of the SPMD-partitioned executable is already per-device, so
+the prompt's "/ chips" is folded in.) Hardware: TPU v5e-like — 197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI (3D-torus links; we charge the
+busiest single link, a conservative serialization bound).
+
+Also reported: MODEL_FLOPS (6ND train / 2ND forward, N_active for MoE), the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat & masked-block
+waste), the dominant term, and roofline fraction = dominant / sum-of-terms
+upper-bounded step time.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def analyze_cell(r: Dict) -> Optional[Dict]:
+    if r.get("status") != "ok":
+        return None
+    chips = r["chips"]
+    # trip-count-corrected rollup (launch/hlo_cost.py); raw cost_analysis
+    # counts loop bodies once and is kept in the artifact for reference
+    cor = r.get("corrected")
+    if cor:
+        flops = cor["flops_per_device"]
+        bytes_acc = cor["bytes_per_device"]
+        coll = sum(cor["collective_bytes"].values())
+    else:
+        flops = r["flops_per_device"]
+        bytes_acc = r["bytes_accessed_per_device"]
+        coll = sum(r["collective_bytes"].values())
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mflops = model_flops_per_device(r["arch"], r["shape"], chips)
+    useful = mflops / flops if flops > 0 else 0.0
+    # roofline fraction: useful compute time over the overlap-free bound
+    t_bound = max(terms.values())
+    frac = (mflops / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0
+
+    hbm_gib = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 2**30
+    return dict(
+        cell=r["cell"],
+        arch=r["arch"],
+        shape=r["shape"],
+        mesh=r["mesh"],
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        useful_ratio=useful,
+        roofline_frac=frac,
+        hbm_gib_per_dev=hbm_gib,
+        fits_16g=hbm_gib < 16.0,
+    )
+
+
+def load_all(mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r["status"] == "skip":
+            rows.append(dict(cell=r["cell"], skip=r["reason"]))
+            continue
+        a = analyze_cell(r)
+        if a:
+            rows.append(a)
+        else:
+            rows.append(dict(cell=r["cell"], skip="ERROR: " + r.get("error", "?")[:60]))
+    return rows
+
+
+def main():
+    print("# roofline — single-pod 16x16 (256 chips); terms in ms per step")
+    print(
+        f"{'cell':58s} {'comp':>7s} {'mem':>7s} {'coll':>7s} "
+        f"{'dominant':>10s} {'useful':>7s} {'frac':>6s} {'HBM':>7s}"
+    )
+    for row in load_all("16x16"):
+        if "skip" in row:
+            print(f"{row['cell']:58s} SKIP: {row['skip']}")
+            continue
+        print(
+            f"{row['cell']:58s} "
+            f"{row['t_compute_s']*1e3:7.2f} {row['t_memory_s']*1e3:7.2f} "
+            f"{row['t_collective_s']*1e3:7.2f} {row['dominant']:>10s} "
+            f"{row['useful_ratio']:7.3f} {row['roofline_frac']:6.3f} "
+            f"{row['hbm_gib_per_dev']:6.2f}G"
+        )
+    print("\n# multi-pod 2x16x16 (512 chips)")
+    for row in load_all("2x16x16"):
+        if "skip" in row:
+            continue
+        print(
+            f"{row['cell']:58s} "
+            f"{row['t_compute_s']*1e3:7.2f} {row['t_memory_s']*1e3:7.2f} "
+            f"{row['t_collective_s']*1e3:7.2f} {row['dominant']:>10s} "
+            f"{row['useful_ratio']:7.3f} {row['roofline_frac']:6.3f} "
+            f"{row['hbm_gib_per_dev']:6.2f}G"
+        )
+
+
+if __name__ == "__main__":
+    main()

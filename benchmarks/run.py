@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,kernels,roofline]
+
+Prints ``name,us_per_call,derived`` CSV lines per bench.
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("mul"):
+        from benchmarks import bench_mul_accuracy
+        bench_mul_accuracy.main()
+        print()
+    if want("exploration"):
+        from benchmarks import bench_exploration
+        bench_exploration.main()
+        print()
+    if want("heat"):
+        from benchmarks import bench_heat
+        bench_heat.main()
+        print()
+    if want("swe"):
+        from benchmarks import bench_swe
+        bench_swe.main()
+        print()
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+        print()
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

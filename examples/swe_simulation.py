@@ -1,0 +1,54 @@
+"""Paper Fig. 8: 2D shallow-water equations across precisions.
+
+Only the x-midpoint momentum-flux equation's multiplications run on the
+configured multiplier (exactly the paper's substitution).
+
+    PYTHONPATH=src python examples/swe_simulation.py [--steps N]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.policy import PRESETS
+from repro.pde import SWEConfig, simulate_swe
+
+
+def ascii_field(w, width=64, height=20):
+    h, wid = w.shape
+    ramp = " .:-=+*#%@"
+    lo, hi = np.nanmin(w), np.nanmax(w)
+    span = (hi - lo) or 1.0
+    ys = np.linspace(0, h - 1, height).astype(int)
+    xs = np.linspace(0, wid - 1, width).astype(int)
+    for y in ys:
+        line = ""
+        for x in xs:
+            v = w[y, x]
+            line += "?" if not np.isfinite(v) else ramp[int((v - lo) / span * (len(ramp) - 1))]
+        print(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    cfg = SWEConfig()
+    print(f"SWE: {cfg.nx}x{cfg.ny} basin, depth {cfg.depth} m, bump {cfg.bump} m, "
+          f"dt {cfg.dt:.1f}s x {args.steps} steps")
+    ref, _ = simulate_swe(cfg, PRESETS["f32"], args.steps)
+    wref = np.asarray(ref[0]) - cfg.depth
+    for name in ("f32", "e5m10", "r2f2_16"):
+        out, _ = simulate_swe(cfg, PRESETS[name], args.steps)
+        w = np.asarray(out[0]) - cfg.depth
+        print(f"\n--- {name} ---")
+        ascii_field(w)
+        if not np.isfinite(w).all():
+            print(f"{name}: SIMULATION DESTROYED (h*h overflowed the fixed format)")
+        elif name != "f32":
+            corr = np.corrcoef(w.reshape(-1), wref.reshape(-1))[0, 1]
+            print(f"{name}: field correlation vs f32 = {corr:.4f}")
+
+
+if __name__ == "__main__":
+    main()

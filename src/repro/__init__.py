@@ -1,0 +1,21 @@
+"""repro — R2F2 (runtime-reconfigurable floating-point precision) in JAX.
+
+Paper: "Exploring and Exploiting Runtime Reconfigurable Floating Point
+Precision in Scientific Computing: a Case Study for Solving PDEs" (2024).
+
+Subpackages:
+  core     — the paper's contribution: flexible formats, R2F2 multiplier,
+             precision policy, rr-precision dot/einsum
+  kernels  — Pallas TPU kernels (+ jnp oracles)
+  pde      — heat1d / swe2d case studies
+  models   — 10-architecture LM zoo (dense/MoE/SSM/xLSTM/hybrid/encoder/VLM)
+  configs  — assigned architectures x shapes registry
+  train    — optimizers, train/serve steps, sharding rules
+  ckpt     — fault-tolerant checkpointing
+  data     — deterministic synthetic pipelines
+  serve    — prefill + decode serving
+  dist     — logical-axis sharding
+  launch   — production meshes, multi-pod dry-run, HLO cost rollup, CLI
+"""
+
+__version__ = "1.0.0"

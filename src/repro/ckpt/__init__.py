@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing."""
+
+from .checkpoint import available_steps, latest_step, restore, save

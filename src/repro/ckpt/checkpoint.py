@@ -1,0 +1,113 @@
+"""Fault-tolerant, mesh-agnostic checkpointing.
+
+Layout: ``<dir>/step_<n>/`` with one ``.npy`` per leaf (path-encoded names)
+plus ``manifest.json`` (treedef, shapes, dtypes, step, timestamp). Writes go
+to ``step_<n>.tmp`` and are atomically renamed, so a crash mid-write never
+corrupts the latest checkpoint; ``latest_step`` only trusts complete
+directories.
+
+Restore is *mesh-agnostic*: leaves are loaded on host and ``device_put``
+against whatever sharding the caller provides — the elastic-rescale path
+(launch/elastic.py) is exactly "restore with a different mesh".
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "available_steps"]
+
+_SEP = "__"
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = _SEP.join(_key_str(k) for k in path)
+        out[name] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return f"idx{k.idx}"
+    return str(k)
+
+
+def save(tree, ckpt_dir: str, step: int) -> str:
+    """Atomic checkpoint write. Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "time": time.time(), "leaves": {}}
+    for name, leaf in leaves.items():
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def available_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                steps.append(int(d[len("step_") :]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(like, ckpt_dir: str, step: int, shardings=None):
+    """Load a checkpoint into the structure of ``like``.
+
+    ``shardings``: optional pytree (matching ``like``) of jax.sharding
+    objects — pass the *current* mesh's shardings to reshard on load
+    (elastic restart). Without it, arrays land on the default device.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    names = list(_flatten_with_paths(like).keys())
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise ValueError(f"checkpoint at {path} missing leaves: {missing[:5]}...")
+
+    loaded = {n: np.load(os.path.join(path, n + ".npy")) for n in names}
+    flat_like, tdef = jax.tree_util.tree_flatten(like)
+    ordered = [loaded[n] for n in names]
+
+    if shardings is not None:
+        shard_flat = tdef.flatten_up_to(shardings)
+        ordered = [jax.device_put(a, s) for a, s in zip(ordered, shard_flat)]
+    else:
+        ordered = [jax.device_put(a) for a in ordered]
+    return tdef.unflatten(ordered)

@@ -1,0 +1,11 @@
+"""The paper's own workload #2: 2D shallow-water equations (Lax-Wendroff).
+
+Only the x-midpoint momentum-flux equation's multiplications run on the
+configured multiplier (the paper's §5.3 substitution); h*h at a realistic
+basin depth overflows E5M10's 65504 ceiling — the overflow failure mode.
+"""
+
+from repro.pde.swe2d import SWEConfig
+
+CONFIG = SWEConfig(nx=128, ny=128, depth=500.0, bump=100.0)
+BENCH_STEPS = 400

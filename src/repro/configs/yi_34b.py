@@ -1,0 +1,15 @@
+"""yi-34b [dense] — llama-arch GQA. [arXiv:2403.04652]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    pattern=("attn+mlp",),
+    rope_theta=5000000.0,
+)

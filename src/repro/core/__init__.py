@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: runtime-reconfigurable FP precision.
+
+Layers:
+  flexformat — the <EB, MB, FX> format family + bit-exact quantization
+  r2f2       — the reconfigurable multiplier (tile-wise + sequential-faithful)
+  policy     — PrecisionConfig / RangeTracker (when & how to reconfigure)
+  rr_dot     — einsum/dot wrappers every model matmul routes through
+"""
+
+from .flexformat import (
+    E5M8,
+    E5M9,
+    E5M10,
+    E8M23,
+    FlexFormat,
+    exponent_redundant,
+    max_normal,
+    min_normal,
+    min_subnormal,
+    pack_r2f2,
+    quantize_em,
+    quantize_em_with_flags,
+    quantize_product,
+    unbiased_exponent,
+    unpack_r2f2,
+)
+from .policy import PRESETS, PrecisionConfig, RangeTracker, tracker_init, tracker_k, tracker_update
+from .r2f2 import (
+    R2F2Stats,
+    SequentialState,
+    product_guard_bits,
+    r2f2_mul_sequential,
+    r2f2_multiply,
+    select_k,
+    select_k_operand,
+)
+from .rr_dot import rr_dot, rr_einsum, rr_operand

@@ -1,0 +1,162 @@
+"""Precision policy: how rr-precision plugs into models and solvers.
+
+The paper's precision adjustment unit is *stateful in time* because hardware
+sees one multiplication at a time. A vector machine sees whole tiles, so two
+complementary mechanisms cover the same behaviour (DESIGN.md §2):
+
+* **stateless tile selection** (``mode="rr_tile"``): every operand tile gets
+  the minimal safe exponent split ``k`` from a max-|x| pre-pass — the
+  runtime reconfiguration happens per tile per step, no carried state;
+* **tracked selection** (``mode="rr_tracked"``): a :class:`RangeTracker`
+  carries an EMA of each site's max exponent across steps (the moral
+  equivalent of the hardware unit's persistence, and of AMP loss-scaling
+  state), so the split is available *before* the data is seen — this is the
+  deployment story, where the format choice must precede the MXU issue.
+
+``mode="deploy"`` runs the arithmetic in bf16 (the MXU-rate proxy for 16-bit
+flexible operands — same operand bytes, same issue rate) while still driving
+the tracker, so dry-run/roofline numbers reflect what R2F2 silicon would
+execute; ``emulate`` modes are bit-exact but slow (numerics studies).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flexformat import FlexFormat, unbiased_exponent
+from .r2f2 import _needed_e_bits, _needed_e_bits_lo, _tile_max_exp, select_k  # noqa: F401
+
+__all__ = [
+    "PrecisionConfig",
+    "RangeTracker",
+    "tracker_init",
+    "tracker_update",
+    "tracker_k",
+    "PRESETS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Static (hashable — safe as a jit static arg) precision policy.
+
+    mode:
+      "f32"        — reference arithmetic
+      "bf16"       — plain mixed precision baseline
+      "fixed"      — fixed E(e)M(m) emulation (e.g. E5M10: the paper's
+                     failing baseline), ``fixed_em`` below
+      "rr_tile"    — R2F2 emulation, per-tile runtime k selection
+      "rr_tracked" — R2F2 emulation, k from a RangeTracker site
+      "deploy"     — bf16 arithmetic + tracker-driven k bookkeeping
+    """
+
+    mode: str = "deploy"
+    fmt: FlexFormat = FlexFormat(3, 9, 3)  # the paper's favourite 16-bit config
+    fixed_em: Tuple[int, int] = (5, 10)
+    tile: int = 128  # tile edge used for per-tile k selection
+    tail_approx: bool = True  # paper's flexible-region product approximation
+    ema: float = 0.95  # RangeTracker decay
+    headroom: int = 1  # extra exponent slack (in powers of 2) for tracked mode
+
+    def __post_init__(self):
+        if self.mode not in ("f32", "bf16", "fixed", "rr_tile", "rr_tracked", "deploy"):
+            raise ValueError(f"unknown precision mode {self.mode!r}")
+
+    @property
+    def is_emulated(self) -> bool:
+        return self.mode in ("fixed", "rr_tile", "rr_tracked")
+
+
+PRESETS = {
+    "f32": PrecisionConfig(mode="f32"),
+    "bf16": PrecisionConfig(mode="bf16"),
+    "e5m10": PrecisionConfig(mode="fixed", fixed_em=(5, 10)),
+    "e5m9": PrecisionConfig(mode="fixed", fixed_em=(5, 9)),
+    "e5m8": PrecisionConfig(mode="fixed", fixed_em=(5, 8)),
+    "r2f2_16": PrecisionConfig(mode="rr_tile", fmt=FlexFormat(3, 9, 3)),
+    "r2f2_16_384": PrecisionConfig(mode="rr_tile", fmt=FlexFormat(3, 8, 4)),
+    "r2f2_15": PrecisionConfig(mode="rr_tile", fmt=FlexFormat(3, 8, 3)),
+    "r2f2_14": PrecisionConfig(mode="rr_tile", fmt=FlexFormat(3, 7, 3)),
+    "deploy": PrecisionConfig(mode="deploy"),
+}
+
+
+class RangeTracker(NamedTuple):
+    """Per-site numeric state (a pytree; thread it like RNG state).
+
+    Arrays are [n_sites]-shaped; model layers under ``scan`` hold their own
+    stacked copies (leading layer dim) like any other carried state.
+    """
+
+    hi_ema: jnp.ndarray  # f32 — EMA of per-step max needed exponent
+    lo_ema: jnp.ndarray  # f32 — EMA of per-step min needed exponent (underflow side)
+    k: jnp.ndarray  # int32 — current flexible split per site
+    overflow_steps: jnp.ndarray  # int32 — cumulative adjust-up events
+    shrink_steps: jnp.ndarray  # int32 — cumulative adjust-down events
+
+
+def tracker_init(n_sites: int, fmt: FlexFormat, k0: Optional[int] = None) -> RangeTracker:
+    k0 = fmt.fx if k0 is None else k0  # start wide (safe), shrink via redundancy
+    return RangeTracker(
+        hi_ema=jnp.zeros((n_sites,), jnp.float32),
+        lo_ema=jnp.zeros((n_sites,), jnp.float32),
+        k=jnp.full((n_sites,), k0, jnp.int32),
+        overflow_steps=jnp.zeros((n_sites,), jnp.int32),
+        shrink_steps=jnp.zeros((n_sites,), jnp.int32),
+    )
+
+
+def _site_max_exp(x) -> jnp.ndarray:
+    mag = jnp.where(jnp.isfinite(x), jnp.abs(x), 0.0)
+    return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38))).astype(jnp.float32)
+
+
+def tracker_update(
+    state: RangeTracker, site: int, a, b, cfg: PrecisionConfig
+) -> RangeTracker:
+    """Fold the live ranges of a multiplication site into the tracker and
+    re-pick its split, mirroring the paper's adjust unit across steps:
+    grow immediately on demand (overflow semantics), shrink only when the
+    EMA shows persistent redundancy."""
+    fmt = cfg.fmt
+
+    def k_for(hi, lo):
+        e = jnp.maximum(
+            _needed_e_bits(hi.astype(jnp.int32), fmt.eb, fmt.fx),
+            _needed_e_bits_lo(lo.astype(jnp.int32), fmt.eb, fmt.fx),
+        )
+        return e - fmt.eb
+
+    ae = _site_max_exp(a)
+    be = _site_max_exp(b)
+    step_hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
+    step_lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
+
+    hi_ema = cfg.ema * state.hi_ema[site] + (1.0 - cfg.ema) * step_hi
+    hi_ema = jnp.maximum(hi_ema, step_hi)  # never smooth away a spike
+    lo_ema = cfg.ema * state.lo_ema[site] + (1.0 - cfg.ema) * step_lo
+    lo_ema = jnp.minimum(lo_ema, step_lo)
+
+    k_need_now = k_for(step_hi + cfg.headroom, step_lo - cfg.headroom)
+    k_need_ema = k_for(hi_ema + cfg.headroom, lo_ema - cfg.headroom)
+    k_cur = state.k[site]
+    grew = k_need_now > k_cur
+    # grow immediately on demand; shrink only toward the persistent-need EMA
+    k_new = jnp.maximum(k_need_now, jnp.minimum(k_cur, k_need_ema))
+    shrank = k_new < k_cur
+
+    return RangeTracker(
+        hi_ema=state.hi_ema.at[site].set(hi_ema),
+        lo_ema=state.lo_ema.at[site].set(lo_ema),
+        k=state.k.at[site].set(k_new),
+        overflow_steps=state.overflow_steps.at[site].add(grew.astype(jnp.int32)),
+        shrink_steps=state.shrink_steps.at[site].add(shrank.astype(jnp.int32)),
+    )
+
+
+def tracker_k(state: RangeTracker, site: int) -> jnp.ndarray:
+    return state.k[site]

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines (pure function of step)."""
+
+from .pipeline import batch_for_step, batch_spec

@@ -1,0 +1,96 @@
+"""Deterministic synthetic data pipeline.
+
+``batch_for_step(step)`` is a *pure function* — the pipeline has no cursor
+state, so checkpoint/restart resumes exactly, elastic re-sharding is trivial
+(any host can regenerate any shard), and straggler recovery can recompute a
+pod's batch without coordination (DESIGN.md §6).
+
+Token streams are Zipf-ish synthetic language (markov-perturbed) rather than
+uniform noise so losses move and rr-precision range trackers see realistic
+activation clustering. Frontend archs get frame/patch embeddings per the
+STUB contract; hubert gets span masks + cluster labels; pixtral gets a loss
+mask covering text positions only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["batch_for_step", "batch_spec"]
+
+IMG_SEQ = 1024  # pixtral patch-token prefix length (kept modest vs text)
+
+
+def _token_stream(key, batch, seq, vocab):
+    """Zipf-distributed ids with local repetition structure."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.uniform(k1, (batch, seq), minval=1e-6, maxval=1.0)
+    zipf = jnp.minimum((u ** -0.9 - 1.0), float(vocab - 1)).astype(jnp.int32)
+    # splice short repeats to create learnable bigram structure
+    shift = jnp.roll(zipf, 3, axis=1)
+    take = jax.random.bernoulli(k2, 0.3, (batch, seq))
+    toks = jnp.where(take, shift, zipf)
+    return jnp.clip(toks, 0, vocab - 1)
+
+
+def batch_for_step(
+    cfg: ModelConfig,
+    step: int,
+    batch: int,
+    seq: int,
+    seed: int = 17,
+) -> Dict[str, jnp.ndarray]:
+    """Global batch for ``step`` (shard by slicing the batch dim)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kt, kf, km = jax.random.split(key, 3)
+
+    if cfg.frontend == "audio":  # hubert: frames in, masked cluster prediction
+        embeds = jax.random.normal(kf, (batch, seq, cfg.frontend_dim), jnp.float32)
+        labels = jax.random.randint(kt, (batch, seq), 0, cfg.vocab)
+        mask = jax.random.bernoulli(km, 0.08, (batch, seq)).astype(jnp.float32)
+        return {"embeds": embeds, "labels": labels, "mask": mask}
+
+    if cfg.frontend == "vision":  # pixtral: patch prefix + text tokens
+        img = min(IMG_SEQ, seq // 2)
+        text = seq - img
+        embeds = jax.random.normal(kf, (batch, img, cfg.frontend_dim), jnp.float32)
+        toks = _token_stream(kt, batch, text, cfg.vocab)
+        labels = jnp.roll(toks, -1, axis=1)
+        mask = jnp.ones((batch, text), jnp.float32).at[:, -1].set(0.0)
+        return {"embeds": embeds, "tokens": toks, "labels": labels, "mask": mask}
+
+    toks = _token_stream(kt, batch, seq, cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32).at[:, -1].set(0.0)
+    return {"tokens": toks, "labels": labels, "mask": mask}
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStructs matching batch_for_step (for .lower())."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim), f32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), f32),
+        }
+    if cfg.frontend == "vision":
+        img = min(IMG_SEQ, seq // 2)
+        text = seq - img
+        return {
+            "embeds": jax.ShapeDtypeStruct((batch, img, cfg.frontend_dim), f32),
+            "tokens": jax.ShapeDtypeStruct((batch, text), i32),
+            "labels": jax.ShapeDtypeStruct((batch, text), i32),
+            "mask": jax.ShapeDtypeStruct((batch, text), f32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        "mask": jax.ShapeDtypeStruct((batch, seq), f32),
+    }

@@ -1,0 +1,86 @@
+"""Pallas kernel: 1D heat-equation explicit-FD stencil with R2F2 multiplies.
+
+One solver step is ``u' = u + r * (u_left - 2u + u_right)`` (paper §2). The
+kernel fuses, per VMEM block: state quantization to the runtime format
+(storage is 16-bit in the paper's system), the stencil shifts, and the R2F2
+multiplication ``r * lap`` with per-block runtime split selection — one HBM
+round-trip per step instead of four.
+
+Layout: many independent rods are batched as rows of a (rows, nx) array —
+the row dimension is the natural TPU parallel/shard axis. The x extent stays
+whole inside the block (a 16k-point f32 rod is 64 KiB — VMEM-friendly), so
+the shifts are in-register slices; Dirichlet boundary values are pinned.
+
+Block: (block_rows, nx); grid over row groups only; (8, 128)-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flexformat import quantize_em, unbiased_exponent
+from repro.core.r2f2 import product_guard_bits, select_k
+
+
+def _r2f2_mul_block(a, b, fmt, tail_approx):
+    """Shared-split R2F2 product of two blocks (same-format rule, §4.1)."""
+
+    def tile_max_exp(t):
+        mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
+        return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+
+    k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
+    e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
+    aq = quantize_em(a, e_b, m_b)
+    bq = quantize_em(b, e_b, m_b)
+    guard = product_guard_bits(fmt, k) if tail_approx else None
+    return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)
+
+
+def _heat_kernel(u_ref, c_ref, o_ref, *, fmt, steps, tail_approx):
+    u = u_ref[...]  # (br, nx) f32 — state stays f32 (paper §5.2: the unit
+    # converts from/to single precision around each multiply)
+    alpha = c_ref[0, 0]
+    dtodx2 = c_ref[0, 1]
+
+    def one_step(_, u):
+        # interior laplacian only (boundary columns are Dirichlet-pinned and
+        # must not contaminate the per-block range statistics)
+        lap = u[:, :-2] - 2.0 * u[:, 1:-1] + u[:, 2:]  # adds in f32
+        flux = _r2f2_mul_block(jnp.broadcast_to(alpha, lap.shape), lap, fmt, tail_approx)
+        upd = _r2f2_mul_block(flux, jnp.broadcast_to(dtodx2, lap.shape), fmt, tail_approx)
+        interior = u[:, 1:-1] + upd
+        return jnp.concatenate([u[:, :1], interior, u[:, -1:]], axis=1)
+
+    o_ref[...] = jax.lax.fori_loop(0, steps, one_step, u)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "steps", "block_rows", "tail_approx", "interpret")
+)
+def heat_stencil_pallas(
+    u0, alpha, dtodx2, *, fmt, steps=1, block_rows=8, tail_approx=True, interpret=True
+):
+    """Advance (rows, nx) rod states ``steps`` explicit-FD steps, with the
+    update decomposed into the two R2F2 multiplies ``alpha * lap`` and
+    ``flux * (dt/dx^2)`` exactly like repro.pde.heat1d."""
+    rows, nx = u0.shape
+    br = min(block_rows, rows)
+    if rows % br:
+        raise ValueError(f"rows {rows} not divisible by block_rows {br}")
+    c_arr = jnp.array([[alpha, dtodx2]], jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_heat_kernel, fmt=fmt, steps=steps, tail_approx=tail_approx),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, nx), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, nx), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, nx), jnp.float32),
+        interpret=interpret,
+    )(u0.astype(jnp.float32), c_arr)

@@ -1,0 +1,109 @@
+"""Pallas kernel: blocked matmul through R2F2 multipliers.
+
+Faithful mapping of the paper's multiplier into an MXU pipeline:
+
+* each (bm, bk) x (bk, bn) block pair shares ONE flexible split ``k`` —
+  the paper's same-format-operands rule (§4.1) at block granularity;
+* ``k`` is the minimal split covering both operand tiles AND their product
+  bound — the overflow-retry loop collapsed into a pre-pass (DESIGN.md §2);
+* operands are quantized to ``E(EB+k) M(MB+FX-k)`` bit-exactly (RNE);
+* products accumulate in f32. Two product-rounding semantics:
+    - ``round_products=False`` (deployment): products stay exact into the
+      accumulator — how an R2F2-fed MXU would behave (bf16-MXU-style);
+    - ``round_products=True`` (scalar-faithful): every scalar product is
+      rounded to the runtime format (incl. the paper's FX-tail truncation)
+      before summation — the paper's discrete multiplier feeding an adder.
+      Materializes (bm, bk, bn) intermediates; use small blocks.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics — sequential
+accumulation into the same output block; m, n are "parallel"). Default
+blocks (128, 128, 128): A+B+O tiles = 3 * 64 KiB f32 in VMEM, MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flexformat import quantize_em, unbiased_exponent
+from repro.core.r2f2 import product_guard_bits, select_k
+
+DEFAULT_BLOCKS = (128, 128, 128)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, fmt, round_products, tail_approx):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def tile_max_exp(t):
+        mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
+        return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+
+    k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
+    e_bits = fmt.eb + k
+    m_bits = fmt.mb + fmt.fx - k
+    aq = quantize_em(a, e_bits, m_bits)
+    bq = quantize_em(b, e_bits, m_bits)
+
+    if round_products:
+        # scalar-faithful: round each product to the runtime format before
+        # the adds (paper Fig. 4b, incl. the FX-tail truncation).
+        guard = product_guard_bits(fmt, k) if tail_approx else None
+        prods = aq[:, :, None] * bq[None, :, :]  # (bm, bk, bn), exact in f32
+        prods = quantize_em(prods, e_bits, m_bits, tail_trunc_bits=guard)
+        partial = jnp.sum(prods, axis=1)
+    else:
+        partial = jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+    o_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "blocks", "round_products", "tail_approx", "interpret"),
+)
+def r2f2_matmul_pallas(
+    a,
+    b,
+    *,
+    fmt,
+    blocks=DEFAULT_BLOCKS,
+    round_products=False,
+    tail_approx=True,
+    interpret=True,
+):
+    """C = A @ B with R2F2 block semantics. A: (M, K) f32, B: (K, N) f32."""
+    m, kdim = a.shape
+    k2, n = b.shape
+    if kdim != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    bm = min(blocks[0], m)
+    bn = min(blocks[1], n)
+    bk = min(blocks[2], kdim)
+    if m % bm or n % bn or kdim % bk:
+        raise ValueError(f"shapes {a.shape}@{b.shape} not divisible by {(bm, bn, bk)}")
+
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _matmul_kernel,
+            fmt=fmt,
+            round_products=round_products,
+            tail_approx=tail_approx,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

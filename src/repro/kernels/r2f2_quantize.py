@@ -1,0 +1,66 @@
+"""Pallas kernel: per-tile R2F2 quantization (the "precision adjustment
+unit" as a TPU vector-unit pass).
+
+Each grid cell owns one (bm, bn) VMEM tile. The kernel body scans the tile's
+max magnitude, picks the minimal flexible split ``k`` (DESIGN.md §2 — the
+hardware's overflow-retry loop collapsed into a pre-pass), quantizes the tile
+to ``E(EB+k) M(MB+FX-k)`` with bit-exact RNE, and writes both the quantized
+tile and the per-tile ``k`` metadata (the mask bits of Fig. 4a, stored
+out-of-band like any block-scaled format's scale).
+
+TPU notes: everything is elementwise u32 bit-twiddling + an 8x128-lane max
+reduction — pure VPU work, no MXU. Block shape defaults to (256, 256) f32 =
+256 KiB in VMEM (in+out), well under the ~16 MiB/core budget, and is a
+multiple of the (8, 128) f32 tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flexformat import quantize_em, unbiased_exponent
+from repro.core.r2f2 import select_k_operand
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _quantize_kernel(x_ref, y_ref, k_ref, *, fmt):
+    x = x_ref[...]
+    mag = jnp.where(jnp.isfinite(x), jnp.abs(x), 0.0)
+    me = unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+    # operand-only need: product bound handled by the consumer's shared-k
+    k = select_k_operand(me, fmt)
+    e_bits = fmt.eb + k
+    m_bits = fmt.mb + fmt.fx - k
+    y_ref[...] = quantize_em(x, e_bits, m_bits)
+    k_ref[0, 0] = k
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def r2f2_quantize_pallas(x, *, fmt, block=DEFAULT_BLOCK, interpret=True):
+    """Quantize a 2D f32 array tile-by-tile. Returns (y, k_tiles)."""
+    m, n = x.shape
+    bm = min(block[0], m)
+    bn = min(block[1], n)
+    if m % bm or n % bn:
+        raise ValueError(f"shape {x.shape} not divisible by block ({bm},{bn})")
+    grid = (m // bm, n // bn)
+    y, k = pl.pallas_call(
+        functools.partial(_quantize_kernel, fmt=fmt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return y, k

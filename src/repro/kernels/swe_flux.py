@@ -1,0 +1,72 @@
+"""Pallas kernel: SWE momentum-flux equation with R2F2 multiplies.
+
+The paper's substituted sub-equation (§5.3) is the SWE hot spot:
+
+    Ux_mx = q1*q1/q3 + 0.5*g*q3*q3
+
+This kernel fuses, per VMEM block: the two R2F2 multiplications (q1*q1 and
+g/2*q3*q3, each with a block-shared runtime split), the f32 division, and
+the add — one HBM round trip for the whole flux field instead of five.
+
+Blocks are (bm, bn) tiles over the 2D field, (8, 128)-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flexformat import quantize_em, unbiased_exponent
+from repro.core.r2f2 import product_guard_bits, select_k
+
+G_GRAV = 9.81
+DEFAULT_BLOCK = (64, 128)
+
+
+def _rr_mul_block(a, b, fmt, tail_approx):
+    def tile_max_exp(t):
+        mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
+        return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+
+    k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
+    e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
+    aq = quantize_em(a, e_b, m_b)
+    bq = quantize_em(b, e_b, m_b)
+    guard = product_guard_bits(fmt, k) if tail_approx else None
+    return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)
+
+
+def _swe_flux_kernel(q1_ref, q3_ref, o_ref, *, fmt, tail_approx):
+    q1 = q1_ref[...]
+    q3 = q3_ref[...]
+    t1 = _rr_mul_block(q1, q1, fmt, tail_approx)  # multiplier 1
+    t2 = t1 / q3  # f32 divider (R2F2 is a multiplier)
+    t3 = _rr_mul_block(q3, q3, fmt, tail_approx)  # multiplier 2
+    t4 = _rr_mul_block(jnp.full_like(t3, 0.5 * G_GRAV), t3, fmt, tail_approx)  # mult 3
+    o_ref[...] = t2 + t4
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "block", "tail_approx", "interpret")
+)
+def swe_flux_pallas(q1, q3, *, fmt, block=DEFAULT_BLOCK, tail_approx=True, interpret=True):
+    """Momentum flux over 2D fields q1=(hu), q3=h. Returns same-shape f32."""
+    m, n = q1.shape
+    bm = min(block[0], m)
+    bn = min(block[1], n)
+    if m % bm or n % bn:
+        raise ValueError(f"shape {q1.shape} not divisible by block ({bm},{bn})")
+    return pl.pallas_call(
+        functools.partial(_swe_flux_kernel, fmt=fmt, tail_approx=tail_approx),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(q1.astype(jnp.float32), q3.astype(jnp.float32))

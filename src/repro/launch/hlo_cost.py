@@ -1,0 +1,301 @@
+"""Trip-count-aware cost rollup over compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body exactly ONCE,
+regardless of trip count (verified empirically: a scan of L matmuls reports
+one matmul's flops for any L). Every repeated structure in this framework —
+the scan over layer groups, flash-attention chunk loops, SSM/xLSTM chunk
+scans — therefore vanishes from the naive numbers. This module re-derives
+
+    flops            — 2 * numel(result) * prod(contracting dims) per dot
+    bytes accessed   — HBM-traffic model: result bytes of *materializing*
+                       ops (fusions, dots, copies/converts, gathers/scatters,
+                       dynamic slices, reduces, collectives) plus dot operand
+                       reads (weights/activations). Elementwise chains live
+                       inside fusions post-optimization, and producers'
+                       results are counted exactly once — no per-consumer
+                       double counting. VMEM residency: dot operands small
+                       enough to stay on-chip (<= VMEM_RESIDENT_BYTES) are
+                       charged once per loop *entry*, not per trip — a TPU
+                       keeps loop-invariant weights resident (e.g. sLSTM's
+                       16.8 MB recurrent block read 4096x per layer would
+                       otherwise dominate every other term by 100x).
+    collective bytes — result-shape bytes per collective, by kind
+
+by walking the computation graph with multipliers: ``while`` bodies get
+``known_trip_count`` (present in backend_config for all lax.scan loops),
+call/fusion/conditional branches get x1.
+
+This is the measurement layer behind EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_hlo_costs", "HLOCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0, "s2": 1, "u2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+VMEM_RESIDENT_BYTES = 32 * 2**20  # operands below this stay on-chip in loops
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_ONE_RE = re.compile(r"(?:condition|body|to_apply|calls)=%([\w\.\-]+)")
+_CALLED_LIST_RE = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+
+
+def _called_computations(line: str) -> List[str]:
+    names = list(_CALLED_ONE_RE.findall(line))
+    for group in _CALLED_LIST_RE.findall(line):
+        names += re.findall(r"%([\w\.\-]+)", group)
+    return names
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "reshape",  # layout-preserving on CPU/TPU when bitcastable
+}
+
+# ops whose results are HBM-materialized buffers in scheduled post-opt HLO
+_MATERIALIZING = {
+    "fusion", "dot", "custom-call", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "copy", "copy-start", "transpose", "convert",
+    "reduce", "reduce-window", "sort", "select-and-scatter", "pad",
+    "concatenate", "slice", "reverse", "cholesky", "triangular-solve",
+    "all-reduce", "all-reduce-start", "all-gather", "all-gather-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start", "rng", "rng-bit-generator",
+}
+
+
+def _shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (numel, bytes) across all array shapes in a type string."""
+    numel = 0
+    bts = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        bts += n * _DTYPE_BYTES[dt]
+    return numel, bts
+
+
+class _Instr:
+    __slots__ = ("name", "result_type", "op", "body", "line")
+
+    def __init__(self, name, result_type, op, line):
+        self.name = name
+        self.result_type = result_type
+        self.op = op
+        self.line = line
+
+
+class HLOCost(dict):
+    """dict with keys: flops, bytes, collective_bytes (per kind), counts."""
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    depth = 0
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        if s and not s.startswith("//"):
+            comps[cur].append(s)
+    return comps
+
+
+def _result_type_of(rest: str) -> str:
+    """Everything up to the op name: 'f32[8,16]{1,0} dot(...)' -> type part."""
+    # op name = first identifier followed by '('
+    m = re.search(r"([\w\-]+)\(", rest)
+    if m is None:
+        return rest
+    return rest[: m.start()]
+
+
+def _op_of(rest: str) -> str:
+    m = re.search(r"([\w\-]+)\(", rest)
+    return m.group(1) if m else ""
+
+
+def _dus_update_bytes(ins, instrs, type_of, operand_names):
+    """If ``ins`` is a dynamic-update-slice (or a fusion rooted in one),
+    return the UPDATE operand's bytes; else None. XLA aliases the target
+    buffer, so only the slice moves — charging the full result per loop
+    iteration over-counted scan-transpose residual writes by ~4 orders of
+    magnitude (EXPERIMENTS.md §Roofline notes)."""
+    line = ins.line
+    if ins.op == "dynamic-update-slice":
+        ops = operand_names(line)
+        if len(ops) >= 2:
+            return _shape_numel_bytes(type_of.get(ops[1], ""))[1]
+        return None
+    if ins.op == "fusion":
+        for sub in _called_computations(line):
+            body = instrs.get(sub, [])
+            if not body:
+                continue
+            root = body[-1]
+            if root.op == "dynamic-update-slice":
+                ops = operand_names(root.line)
+                if len(ops) >= 2:
+                    return _shape_numel_bytes(type_of.get(ops[1], ""))[1]
+    return None
+
+
+def parse_hlo_costs(text: str, entry: Optional[str] = None) -> HLOCost:
+    comps = _split_computations(text)
+    if not comps:
+        return HLOCost(flops=0.0, bytes=0.0, collective_bytes={}, collective_counts={})
+
+    # name -> result type string (for operand shape lookup), per computation
+    # (instruction names are unique module-wide in practice; keep global map)
+    type_of: Dict[str, str] = {}
+    instrs: Dict[str, List[_Instr]] = {}
+    for cname, lines in comps.items():
+        out = []
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rest = m.group(1), m.group(2)
+            rtype = _result_type_of(rest)
+            op = _op_of(rest)
+            type_of[name] = rtype
+            out.append(_Instr(name, rtype, op, line))
+        instrs[cname] = out
+
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        entry_name = m.group(1) if m else next(iter(comps))
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_bytes = defaultdict(float)
+    coll_counts = defaultdict(float)
+
+    def operand_names(line: str) -> List[str]:
+        m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", line[line.find("(") :])
+        if not m:
+            return []
+        args = m.group(1)
+        return re.findall(r"%([\w\.\-]+)", args)
+
+    def dot_flops(ins: _Instr) -> float:
+        out_numel, _ = _shape_numel_bytes(ins.result_type)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        ops = operand_names(ins.line)
+        if not m or not ops:
+            return 0.0
+        lhs_type = type_of.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if not sm:
+            return 0.0
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(dims):
+                contract *= dims[idx]
+        return 2.0 * out_numel * contract
+
+    visited_stack = set()
+
+    def walk(cname: str, mult: float, entry_mult: float = 1.0):
+        nonlocal flops, bytes_acc
+        if cname not in instrs or cname in visited_stack:
+            return
+        visited_stack.add(cname)
+        for ins in instrs[cname]:
+            op = ins.op
+            # recurse into called computations
+            called = _called_computations(ins.line)
+            trip = 1.0
+            if op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            if op == "fusion":
+                # fusion internals: count dot flops only (rare on CPU),
+                # bytes at the fusion boundary below
+                for sub in called:
+                    for fins in instrs.get(sub, []):
+                        if fins.op == "dot":
+                            flops += mult * dot_flops(fins)
+            else:
+                for sub in called:
+                    walk(sub, mult * trip, mult)
+
+            if op in _BOOKKEEPING or not op:
+                continue
+            if op == "dot":
+                flops += mult * dot_flops(ins)
+
+            is_coll = None
+            for c in COLLECTIVES:
+                if op == c or op == c + "-start":
+                    is_coll = c
+                    break
+            _, rbytes = _shape_numel_bytes(ins.result_type)
+            if is_coll:
+                coll_bytes[is_coll] += mult * rbytes
+                coll_counts[is_coll] += mult
+
+            # HBM-traffic model (see module docstring)
+            if op in _MATERIALIZING:
+                dus_update = _dus_update_bytes(ins, instrs, type_of, operand_names)
+                if dus_update is not None:
+                    # in-place slice write (XLA aliases the buffer): charge
+                    # the read-modify-write of the UPDATE, not the buffer
+                    bytes_acc += mult * 2 * dus_update
+                else:
+                    bytes_acc += mult * rbytes
+                if op == "dot":
+                    for o in operand_names(ins.line):
+                        ob = _shape_numel_bytes(type_of.get(o, ""))[1]
+                        # VMEM residency for small (weight-like) operands
+                        m_eff = entry_mult if ob <= VMEM_RESIDENT_BYTES else mult
+                        bytes_acc += m_eff * ob
+        visited_stack.discard(cname)
+
+    walk(entry_name, 1.0)
+    return HLOCost(
+        flops=flops,
+        bytes=bytes_acc,
+        collective_bytes=dict(coll_bytes),
+        collective_counts=dict(coll_counts),
+    )

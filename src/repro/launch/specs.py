@@ -1,0 +1,214 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns abstract shapes only — no device allocation — the
+same pattern shannon/kernels uses: weak-type-correct, shardable stand-ins
+for ``jax.jit(...).lower()``.
+
+Divisibility-guarded sharding: an axis is sharded only when the dimension
+divides the mesh extent; otherwise it silently falls back to replication
+(e.g. hubert's 504-way vocab on a 16-wide model axis, or batch=1 in
+long_500k, whose KV-cache sequence is sharded over ('data','model')=256
+instead — sequence-parallel decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import batch_spec
+from repro.models import init_decode_state, model_init
+from repro.models.config import ModelConfig
+from repro.train.step import TrainConfig, init_train_state, param_pspec
+
+__all__ = [
+    "mesh_extent",
+    "guarded",
+    "train_specs",
+    "decode_specs",
+    "prefill_specs",
+    "cache_pspec_tree",
+]
+
+
+def mesh_extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def guarded(mesh: Mesh, dim: int, axes):
+    """axes if dim divides their extent (and extent present), else None."""
+    if axes is None:
+        return None
+    if isinstance(axes, tuple):
+        kept = tuple(a for a in axes if a in mesh.axis_names)
+    else:
+        kept = (axes,) if axes in mesh.axis_names else ()
+    if not kept:
+        return None
+    ext = mesh_extent(mesh, kept)
+    if ext <= 1 or dim % ext != 0:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _sds_pspec(tree, spec_fn):
+    return jax.tree_util.tree_map_with_path(spec_fn, tree)
+
+
+def _named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# parameter / optimizer-state specs (divisibility-guarded variant)
+# --------------------------------------------------------------------------
+
+
+def _guard_pspec(spec: P, shape, mesh: Mesh) -> P:
+    return P(*(guarded(mesh, d, s) for d, s in zip(shape, tuple(spec) + (None,) * len(shape))))
+
+
+def state_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh):
+    """(state ShapeDtypeStructs, state PartitionSpecs) for train_step."""
+    sds = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0)
+    )
+
+    from repro.train.step import state_pspec_tree  # local import to avoid cycle
+
+    raw = state_pspec_tree(sds, None, mesh)
+    specs = jax.tree_util.tree_map(
+        lambda leaf, sp: _guard_pspec(sp, leaf.shape, mesh), sds, raw,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return sds, specs
+
+
+def params_specs(cfg: ModelConfig, mesh: Mesh):
+    sds = jax.eval_shape(lambda k: model_init(k, cfg), jax.random.PRNGKey(0))
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _guard_pspec(param_pspec(path, leaf, mesh), leaf.shape, mesh),
+        sds,
+    )
+    return sds, specs
+
+
+# --------------------------------------------------------------------------
+# cache specs for decode
+# --------------------------------------------------------------------------
+
+
+def cache_pspec_tree(cache_sds, cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Decode-state shardings. KV caches: (G, B, S, KV, hd) — batch over
+    ('pod','data') when divisible, cache *sequence* over 'model'
+    (flash-decoding distributed softmax); recurrent states: inner dim on
+    'model'."""
+    batch_axes = ("pod", "data")
+
+    def spec(path, leaf):
+        names = [
+            str(
+                getattr(k, "key", None)
+                or getattr(k, "name", None)
+                or getattr(k, "idx", "")
+            )
+            for k in path
+        ]
+        shape = leaf.shape  # leading groups dim
+        dims = list(shape)
+        out = [None] * len(dims)
+        field = names[-1] if names else ""
+        if field in ("k", "v") and len(dims) == 5:  # (G,B,S,KV,hd)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[2] = guarded(mesh, dims[2], "model")
+            if out[1] is None and out[2] == "model":
+                # batch unshardable (e.g. B=1): spread seq over everything
+                out[2] = guarded(mesh, dims[2], ("data", "model")) or "model"
+        elif field == "h" and len(dims) == 4:  # mamba h: (G,B,di,s)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[2] = guarded(mesh, dims[2], "model")
+        elif field == "conv" and len(dims) == 4:  # (G,B,K-1,di)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[3] = guarded(mesh, dims[3], "model")
+        elif field == "C" and len(dims) == 5:  # mlstm C: (G,B,H,dk,dv)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[3] = guarded(mesh, dims[3], "model")
+        elif field == "n" and len(dims) == 4:  # (G,B,H,dk)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[3] = guarded(mesh, dims[3], "model")
+        elif field in ("c", "h") and len(dims) == 3:  # slstm: (G,B,li)
+            out[1] = guarded(mesh, dims[1], batch_axes)
+            out[2] = guarded(mesh, dims[2], "model")
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+# --------------------------------------------------------------------------
+# per-cell input specs
+# --------------------------------------------------------------------------
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig, mesh: Mesh):
+    """Returns (args_sds, in_shardings, out_shardings_hint) for train_step."""
+    state_sds, state_sp = state_specs(cfg, tcfg, mesh)
+    b_sds = batch_spec(cfg, shape.global_batch, shape.seq_len)
+    b_sp = jax.tree_util.tree_map(
+        lambda leaf: P(
+            guarded(mesh, leaf.shape[0], ("pod", "data")), *((None,) * (leaf.ndim - 1))
+        ),
+        b_sds,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return (state_sds, b_sds), (_named(state_sp, mesh), _named(b_sp, mesh)), _named(state_sp, mesh)
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    p_sds, p_sp = params_specs(cfg, mesh)
+    b_sds = batch_spec(cfg, shape.global_batch, shape.seq_len)
+    b_sds = {k: v for k, v in b_sds.items() if k in ("tokens", "embeds")}
+    b_sp = jax.tree_util.tree_map(
+        lambda leaf: P(
+            guarded(mesh, leaf.shape[0], ("pod", "data")), *((None,) * (leaf.ndim - 1))
+        ),
+        b_sds,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return (p_sds, b_sds), (_named(p_sp, mesh), _named(b_sp, mesh))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    p_sds, p_sp = params_specs(cfg, mesh)
+    cache_sds = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+    cache_sp = cache_pspec_tree(cache_sds, cfg, mesh, shape.global_batch)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sp = P(guarded(mesh, shape.global_batch, ("pod", "data")), None)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return (
+        (p_sds, cache_sds, tok_sds, pos_sds),
+        (
+            _named(p_sp, mesh),
+            _named(cache_sp, mesh),
+            NamedSharding(mesh, tok_sp),
+            NamedSharding(mesh, P()),
+        ),
+    )

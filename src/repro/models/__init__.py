@@ -1,0 +1,4 @@
+"""Composable model zoo: dense / MoE / SSM / xLSTM / hybrid transformers."""
+
+from .config import ModelConfig
+from .model import decode_step, forward, init_decode_state, lm_loss, model_init, prefill

@@ -1,0 +1,199 @@
+"""GQA attention: training/prefill (full-sequence) and decode (KV cache).
+
+Grouped computation never materializes repeated KV heads: q is viewed as
+(B, S, KV, G, hd) and contracted against (B, T, KV, hd) directly.
+
+Decode KV caches are sharded over the *sequence* axis of the cache
+("kv_seq" -> model axis): with GQA the kv-head count (4-16) is usually
+smaller than the TP degree, so head-sharding the cache wastes chips, while
+sequence-sharding scales to any mesh and XLA's SPMD partitioner inserts the
+flash-decoding-style max/sum all-reduces for the softmax over the sharded
+axis (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.core.rr_dot import rr_dot, rr_einsum
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rope
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "KVCache", "init_cache"]
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, KV, hd)
+    v: jnp.ndarray  # (B, S_max, KV, hd)
+
+
+def attn_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, prec: PrecisionConfig):
+    """Returns q: (B,S,H,hd) flat heads; k, v: (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    q = rr_dot(x, p["wq"], prec).reshape(B, S, cfg.n_heads, hd)
+    k = rr_dot(x, p["wk"], prec).reshape(B, S, kv, hd)
+    v = rr_dot(x, p["wv"], prec).reshape(B, S, kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+FLASH_THRESHOLD = 4096  # S*T logits above this use the chunked path
+FLASH_CHUNK = 1024
+
+
+def _expand_kv(k, G):
+    """Repeat KV heads to the full head count. Under SPMD with heads sharded
+    on 'model', only the local head group materializes — the repeat is the
+    sharding-friendly flat-head GQA form (§Perf iteration 1: the grouped
+    (B,KV,G,S,T) layout made XLA involuntarily replicate S*T tensors)."""
+    return jnp.repeat(k, G, axis=2)
+
+
+def _dense_attention(q, k, v, causal, window, prec):
+    """q: (B,S,H,hd); k,v: (B,T,H,hd) (already expanded). -> (B,S,H,hd)"""
+    B, S = q.shape[:2]
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    logits = rr_einsum("bshd,bthd->bhst", q, k, prec)  # (B,H,S,T)
+    logits = constrain(logits, "batch", "heads", None, None)
+    ti = jnp.arange(S)[None, :]
+    si = jnp.arange(S)[:, None]
+    mask = jnp.ones((S, S), bool) if not causal else (ti <= si)
+    if window is not None:
+        mask = mask & (ti > si - window)
+    logits = jnp.where(mask[None, None], logits, _NEG)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = rr_einsum("bhst,bthd->bshd", probs, v, prec)
+    return constrain(out, "batch", None, "heads", None)
+
+
+def _chunked_attention(q, k, v, causal, window, prec, cq=FLASH_CHUNK, ck=FLASH_CHUNK):
+    """Flash-style online-softmax attention in pure jnp: outer scan over Q
+    chunks, inner scan over KV chunks with (running max, sum, acc) carry.
+    Peak live logits = (B, H, cq, ck) instead of (B, H, S, T)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    cq = min(cq, S)
+    ck = min(ck, T)
+    assert S % cq == 0 and T % ck == 0, (S, T, cq, ck)
+    nq, nk = S // cq, T // ck
+
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, H, hd), 1, 0)  # (nq,B,cq,H,hd)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, H, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, H, hd), 1, 0)
+
+    qpos_base = jnp.arange(cq)
+    kpos_base = jnp.arange(ck)
+
+    def q_body(_, qi_qblk):
+        qi, qblk = qi_qblk
+        m0 = jnp.full((B, H, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, H, hd), jnp.float32)
+
+        def k_body(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            logit = rr_einsum("bshd,bthd->bhst", qblk, kblk, prec)  # (B,H,cq,ck)
+            logit = constrain(logit, "batch", "heads", None, None)
+            qp = qi * cq + qpos_base[:, None]
+            kp = kj * ck + kpos_base[None, :]
+            msk = jnp.ones((cq, ck), bool) if not causal else (kp <= qp)
+            if window is not None:
+                msk = msk & (kp > qp - window)
+            logit = jnp.where(msk[None, None], logit, _NEG)
+            m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logit - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = rr_einsum("bhst,bthd->bshd", p, vblk, prec)  # (B,cq,H,hd)
+            acc_new = acc * jnp.moveaxis(corr, 2, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(jnp.moveaxis(l, 2, 1), 1e-30)[..., None]
+        return None, constrain(out, "batch", None, "heads", None)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def attn_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, positions=None, window: Optional[int] = None):
+    """Full-sequence attention (training / prefill). Returns (out, KVCache)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(p, x, cfg, positions, prec)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = q * (cfg.hd ** -0.5)
+    kf = _expand_kv(k, G)
+    vf = _expand_kv(v, G)
+
+    if S <= FLASH_THRESHOLD:
+        out = _dense_attention(qf, kf, vf, cfg.causal, window, prec)  # (B,S,H,hd)
+    else:
+        out = _chunked_attention(qf, kf, vf, cfg.causal, window, prec)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = constrain(out, "batch", "seq", "heads")
+    return rr_dot(out, p["wo"], prec), KVCache(k=k, v=v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attn_decode(p, x, cache: KVCache, pos, cfg: ModelConfig, prec: PrecisionConfig, window: Optional[int] = None):
+    """One decode step. x: (B, 1, D); pos: scalar int32 (current index).
+    Returns (out, updated cache)."""
+    B = x.shape[0]
+    kv, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions, prec)
+
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0)
+    )
+    k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
+
+    # flash-decoding form: flat heads, cache sequence stays sharded; XLA
+    # inserts the distributed max/sum for the softmax over the sharded T.
+    kf = _expand_kv(k_cache.astype(jnp.float32), g)
+    vf = _expand_kv(v_cache.astype(jnp.float32), g)
+    logits = rr_einsum("bshd,bthd->bhst", q * (hd ** -0.5), kf, prec)  # (B,H,1,T)
+    t = jnp.arange(cache.k.shape[1])
+    valid = t <= pos
+    if window is not None:
+        valid = valid & (t > pos - window)
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = rr_einsum("bhst,bthd->bshd", probs, vf, prec)
+    out = out.reshape(B, 1, cfg.n_heads * hd)
+    return rr_dot(out, p["wo"], prec), KVCache(k=k_cache, v=v_cache)

@@ -1,0 +1,85 @@
+"""Shared neural-net layers (pure functional JAX; params = nested dicts).
+
+Every matmul routes through ``repro.core.rr_dot`` so the paper's
+rr-precision policy applies uniformly (DESIGN.md §4). Initializers take an
+explicit PRNG key; dtypes are f32 at rest (the precision policy decides the
+compute representation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.core.rr_dot import rr_dot, rr_einsum
+from repro.dist.sharding import constrain
+
+__all__ = [
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "mlp_init",
+    "mlp_apply",
+    "embed_init",
+    "rope",
+    "silu",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * w
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def mlp_init(key, d: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[0], d_ff, d)}
+    if act == "swiglu":
+        p["gate"] = dense_init(ks[1], d, d_ff)
+        p["up"] = dense_init(ks[2], d, d_ff)
+    else:  # gelu
+        p["up"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def mlp_apply(p, x, act: str, prec: PrecisionConfig):
+    if act == "swiglu":
+        h = silu(rr_dot(x, p["gate"], prec)) * rr_dot(x, p["up"], prec)
+    else:
+        h = jax.nn.gelu(rr_dot(x, p["up"], prec))
+    h = constrain(h, "batch", "seq", "mlp")
+    return rr_dot(h, p["down"], prec)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding on the last (head) dim. x: (..., S, n, hd);
+    positions: (..., S) int32 broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

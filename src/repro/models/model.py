@@ -1,0 +1,309 @@
+"""Model assembly: embedding -> scanned block groups -> norm -> head.
+
+The cyclic ``cfg.pattern`` (config.py) defines one *group*; parameters are
+stacked over ``cfg.groups`` and applied with ``jax.lax.scan`` so the HLO is
+depth-independent. Decode threads a per-group cache pytree (KV caches for
+attention positions, recurrent states for mamba/xLSTM positions) through the
+same scan.
+
+Three entry points:
+  forward()     — full-sequence (training / encoder / prefill)
+  prefill()     — forward + per-layer cache collection
+  decode_step() — one token with cache (the serve_step body)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.core.rr_dot import rr_dot
+from repro.dist.sharding import constrain
+from repro.models import attention, moe, ssm, xlstm
+from repro.models.config import ModelConfig, parse_entry
+from repro.models.layers import embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+__all__ = ["model_init", "forward", "prefill", "decode_step", "init_decode_state", "lm_loss"]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, entry: str, cfg: ModelConfig):
+    mixer, ffn = parse_entry(entry)
+    ks = jax.random.split(key, 3)
+    p: dict = {"ln1": rmsnorm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attention.attn_init(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = ssm.mamba_init(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg)
+    elif mixer == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg)
+    if ffn == "mlp":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    elif ffn == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = moe.moe_init(ks[1], cfg)
+    return p
+
+
+def model_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, len(cfg.pattern) + 3)
+    blocks = []
+    for i, entry in enumerate(cfg.pattern):
+        gkeys = jax.random.split(ks[i], cfg.groups)
+        blocks.append(jax.vmap(lambda k: _block_init(k, entry, cfg))(gkeys))
+    params = {
+        "embed": embed_init(ks[-3], cfg.vocab, cfg.d_model),
+        "blocks": tuple(blocks),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(ks[-2], (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        )
+    if cfg.frontend is not None:
+        params["frontend_proj"] = (
+            jax.random.normal(ks[-1], (cfg.frontend_dim, cfg.d_model), jnp.float32)
+            * cfg.frontend_dim**-0.5
+        )
+    return params
+
+
+# --------------------------------------------------------------------------
+# block application
+# --------------------------------------------------------------------------
+
+
+def _mixer_apply(entry, bp, x, cfg, prec, window, cache=None, pos=None):
+    """Returns (residual_out, new_cache_or_state)."""
+    mixer, _ = parse_entry(entry)
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        if cache is not None and pos is not None:
+            return attention.attn_decode(bp["attn"], h, cache, pos, cfg, prec, window=window)
+        return attention.attn_apply(bp["attn"], h, cfg, prec, window=window)
+    if mixer == "mamba":
+        return ssm.mamba_apply(bp["mamba"], h, cfg, prec, state=cache)
+    if mixer == "mlstm":
+        return xlstm.mlstm_apply(bp["mlstm"], h, cfg, prec, state=cache)
+    if mixer == "slstm":
+        return xlstm.slstm_apply(bp["slstm"], h, cfg, prec, state=cache)
+    raise ValueError(mixer)
+
+
+def _ffn_apply(entry, bp, x, cfg, prec):
+    """Returns (residual_out, aux_loss)."""
+    _, ffn = parse_entry(entry)
+    if ffn is None:
+        return None, 0.0
+    h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if ffn == "mlp":
+        return mlp_apply(bp["mlp"], h, cfg.act, prec), 0.0
+    out, aux = moe.moe_apply(bp["moe"], h, cfg, prec)
+    return out, aux
+
+
+def _group_apply(x, group_params, cfg, prec, window, caches=None, pos=None):
+    """Apply one pattern period. caches: tuple per position (or None)."""
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for i, entry in enumerate(cfg.pattern):
+        bp = jax.tree_util.tree_map(lambda a: a, group_params[i])
+        cache_i = None if caches is None else caches[i]
+        out, new_cache = _mixer_apply(entry, bp, x, cfg, prec, window, cache_i, pos)
+        x = x + out
+        x = constrain(x, "batch", "seq", "embed")
+        ffn_out, aux = _ffn_apply(entry, bp, x, cfg, prec)
+        if ffn_out is not None:
+            x = x + ffn_out
+            x = constrain(x, "batch", "seq", "embed")
+        aux_total = aux_total + aux
+        new_caches.append(new_cache)
+    return x, aux_total, tuple(new_caches)
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens=None, embeds=None, prec=None):
+    """tokens: (B, S) int32 and/or embeds: (B, S_f, frontend_dim)."""
+    parts = []
+    if embeds is not None:
+        parts.append(
+            rr_dot(embeds.astype(jnp.float32), params["frontend_proj"], prec)
+        )
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    prec: PrecisionConfig,
+    tokens=None,
+    embeds=None,
+    window: Optional[int] = None,
+    remat: bool = True,
+    carry_dtype=None,
+):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``carry_dtype=jnp.bfloat16`` stores the scanned group-boundary
+    activations (the only tensors remat must keep, one (B,S,d) per group) in
+    bf16 — halves the dominant training-memory term for deep models (§Perf:
+    llama3-405b keeps 126 boundaries).
+    """
+    x = _embed_inputs(params, cfg, tokens, embeds, prec)
+
+    def group_fn(x, gp):
+        x, aux, _ = _group_apply(x.astype(jnp.float32), gp, cfg, prec, window)
+        if carry_dtype is not None:
+            x = x.astype(carry_dtype)
+        return x, aux
+
+    if remat:
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if carry_dtype is not None:
+        x = x.astype(carry_dtype)
+    x, auxs = jax.lax.scan(group_fn, x, params["blocks"])
+    x = x.astype(jnp.float32)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = rr_dot(x, head, prec)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, jnp.sum(auxs)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    """Cache pytree: tuple over pattern positions, leading groups dim."""
+
+    def one_group(_):
+        caches = []
+        for entry in cfg.pattern:
+            mixer, _ = parse_entry(entry)
+            if mixer == "attn":
+                caches.append(attention.init_cache(cfg, batch, max_len, dtype=cache_dtype))
+            elif mixer == "mamba":
+                caches.append(ssm.init_mamba_state(cfg, batch))
+            elif mixer == "mlstm":
+                caches.append(xlstm.init_mlstm_state(cfg, batch))
+            elif mixer == "slstm":
+                caches.append(xlstm.init_slstm_state(cfg, batch))
+        return tuple(caches)
+
+    return jax.vmap(one_group)(jnp.arange(cfg.groups))
+
+
+def decode_step(
+    params,
+    caches,
+    tokens,
+    pos,
+    cfg: ModelConfig,
+    prec: PrecisionConfig,
+    window: Optional[int] = None,
+):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, 1, vocab), new_caches)."""
+    x = params["embed"][tokens]
+    x = constrain(x, "batch", None, "embed")
+
+    def group_fn(x, gp_and_cache):
+        gp, cache = gp_and_cache
+        x, _, new_cache = _group_apply(x, gp, cfg, prec, window, caches=cache, pos=pos)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(group_fn, x, (params["blocks"], caches))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = rr_dot(x, head, prec)
+    return constrain(logits, "batch", None, "vocab"), new_caches
+
+
+def prefill(params, cfg, prec, tokens=None, embeds=None, max_len=None, window=None, cache_dtype=jnp.bfloat16):
+    """Forward pass that also fills a decode cache (attention positions only
+    get true caches; recurrent positions get their boundary states)."""
+    B = (tokens if tokens is not None else embeds).shape[0]
+    x = _embed_inputs(params, cfg, tokens, embeds, prec)
+    S = x.shape[1]
+    max_len = max_len or S
+
+    def group_fn(x, gp):
+        x, aux, caches = _group_apply(x, gp, cfg, prec, window)
+        # pad attention KV caches out to max_len for the decode phase
+        padded = []
+        for entry, c in zip(cfg.pattern, caches):
+            mixer, _ = parse_entry(entry)
+            if mixer == "attn":
+                pad = max_len - S
+                k = jnp.pad(c.k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+                v = jnp.pad(c.v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+                padded.append(attention.KVCache(k=k, v=v))
+            else:
+                padded.append(c)
+        return x, (aux, tuple(padded))
+
+    x, (auxs, caches) = jax.lax.scan(group_fn, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = rr_dot(x, head, prec)
+    return constrain(logits, "batch", "seq", "vocab"), caches
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def lm_loss(
+    params,
+    batch,
+    cfg: ModelConfig,
+    prec: PrecisionConfig,
+    window: Optional[int] = None,
+    remat: bool = True,
+    carry_dtype=None,
+):
+    """Causal-LM (or masked-prediction for encoder-only) mean cross-entropy.
+
+    batch: {"tokens": (B,S) int32} and/or {"embeds": (B,S,f)}, plus
+    {"labels": (B,S) int32, "mask": optional (B,S) f32}.
+    """
+    logits, aux = forward(
+        params,
+        cfg,
+        prec,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        window=window,
+        remat=remat,
+        carry_dtype=carry_dtype,
+    )
+    labels = batch["labels"]
+    # frontends prepend embeddings: align logits tail with text labels
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1] :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch
+(GShard/Switch formulation — pure einsum, shards cleanly with experts on the
+'model' mesh axis).
+
+Dispatch: each token picks its top-k experts; tokens beyond an expert's
+capacity C = (tokens/E) * capacity_factor * k are dropped (standard dropless
+alternatives trade ragged layouts for this; capacity dispatch is the
+TPU-friendly dense form). Compute per expert is a (E, C, d) x (E, d, f)
+batched matmul -> FLOPs scale with top_k, not E.
+
+rr-precision note (DESIGN.md §5): expert weight matrices get *per-expert*
+range statistics by construction — the (E, C, d) operand layout gives each
+expert its own quantization tiles, which is exactly the paper's "local
+clusters" exploited per expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.core.rr_dot import rr_einsum
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, silu
+
+__all__ = ["moe_init", "moe_apply"]
+
+# "einsum" (SPMD-friendly one-hot dispatch) | "scatter" (index dispatch);
+# overridable for A/B measurement via REPRO_MOE_DISPATCH.
+import os as _os
+
+DISPATCH_MODE = _os.environ.get("REPRO_MOE_DISPATCH", "scatter")
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_ff, cfg.moe_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e),
+        "gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+        "up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale,
+        "down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * (f ** -0.5),
+    }
+    if cfg.moe_shared_expert:
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": dense_init(kk[0], d, f),
+            "up": dense_init(kk[1], d, f),
+            "down": dense_init(kk[2], f, d),
+        }
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    n = B * S
+    xt = x.reshape(n, d)
+
+    logits = rr_einsum("nd,de->ne", xt, p["router"], prec)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (n, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int((n // e) * cfg.capacity_factor * k))
+
+    # position of each token within its chosen expert's queue (per k-slot)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (n, k, e)
+    flat = onehot.reshape(n * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1  # (n*k, e)
+    pos = pos_in_expert.max(axis=-1).reshape(n, k)  # (n, k)
+    keep = (pos < capacity) & (pos >= 0)
+
+    if DISPATCH_MODE == "einsum":
+        # one-hot einsum dispatch (GShard form). A/B-measured on qwen3
+        # train_4k (EXPERIMENTS.md §Perf iteration 3): collective bytes are
+        # ~unchanged vs scatter while the (n,e,c,d) dispatch contraction adds
+        # token-quadratic MXU flops — kept only for comparison/small-n use.
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity, dtype=xt.dtype)
+        disp = jnp.einsum("nke,nkc->nec", onehot.astype(xt.dtype), pos_oh)
+        comb = jnp.einsum(
+            "nk,nke,nkc->nec", gate_vals.astype(xt.dtype), onehot.astype(xt.dtype), pos_oh
+        )
+        xe = rr_einsum("nec,nd->ecd", disp, xt, prec)
+        xe = constrain(xe, "experts", None, "embed")
+        h = silu(rr_einsum("ecd,edf->ecf", xe, p["gate"], prec)) * rr_einsum(
+            "ecd,edf->ecf", xe, p["up"], prec
+        )
+        h = constrain(h, "experts", None, None)
+        ye = rr_einsum("ecf,efd->ecd", h, p["down"], prec)
+        out = rr_einsum("nec,ecd->nd", comb, ye, prec).reshape(B, S, d)
+    else:
+        # scatter dispatch: O(n*k*d) flops; the SPMD-lowered scatter/gather
+        # all-reduces are ~the all-to-all dispatch lower bound (every token
+        # may route anywhere). Payloads move in the policy's operand width
+        # (bf16 under deploy/bf16 — halves ICI/DCI bytes; f32 for exact runs).
+        payload = jnp.bfloat16 if prec.mode in ("bf16", "deploy") else jnp.float32
+        flat_e = expert_idx.reshape(-1)
+        flat_pos = jnp.where(keep, pos, capacity).reshape(-1)  # slot `capacity` = drop
+        xb = xt.astype(payload)
+        x_rep = jnp.broadcast_to(xb[:, None, :], (n, k, d)).reshape(n * k, d)
+        xe = (
+            jnp.zeros((e, capacity + 1, d), payload)
+            .at[flat_e, flat_pos]
+            .add(x_rep)[:, :capacity]
+        ).astype(jnp.float32)
+        xe = constrain(xe, "experts", None, "embed")
+        h = silu(rr_einsum("ecd,edf->ecf", xe, p["gate"], prec)) * rr_einsum(
+            "ecd,edf->ecf", xe, p["up"], prec
+        )
+        h = constrain(h, "experts", None, None)
+        ye = rr_einsum("ecf,efd->ecd", h, p["down"], prec)
+        yb = ye.astype(payload)
+        yk = yb[flat_e, jnp.minimum(flat_pos, capacity - 1)]  # (n*k, d) payload moves
+        yk = jnp.where(keep.reshape(-1, 1), yk, payload(0)).reshape(n, k, d)
+        out = (
+            jnp.sum(yk.astype(jnp.float32) * gate_vals[..., None], axis=1)
+            .reshape(B, S, d)
+        )
+
+    if cfg.moe_shared_expert:
+        sp = p["shared"]
+        hs = silu(rr_einsum("nd,df->nf", xt, sp["gate"], prec)) * rr_einsum(
+            "nd,df->nf", xt, sp["up"], prec
+        )
+        out = out + rr_einsum("nf,fd->nd", hs, sp["down"], prec).reshape(B, S, d)
+
+    # load-balancing aux loss (Switch): e * sum_e(fraction_tokens * mean_prob)
+    frac = jnp.mean(onehot[:, 0, :].astype(jnp.float32), axis=0)  # top-1 assignment share
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_prob)
+    return out, aux

@@ -1,0 +1,235 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, sequential) — the xlstm-1.3b architecture is a
+7:1 interleave of the two.
+
+mLSTM here is its chunkwise linear-attention form: per head, state
+C in R^{dk x dv} evolves as  C_t = f_t C_{t-1} + i_t k_t v_t^T,
+y_t = C_t^T q_t / max(|n_t^T q_t|, 1). We use sigmoid input/forget gates in
+log-space (always-stable) rather than the paper's exponential-gate
+max-stabilizer; shapes/FLOPs/memory are identical and this numeric substrate
+is orthogonal to the R2F2 contribution (noted in DESIGN.md §8). Chunked:
+intra-chunk attention-like compute + boundary state carried by lax.scan.
+
+Both cells decode with O(1) state — xlstm-1.3b runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.core.rr_dot import rr_dot, rr_einsum
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, silu
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode",
+    "MLSTMState",
+    "init_mlstm_state",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode",
+    "SLSTMState",
+    "init_slstm_state",
+]
+
+LSTM_CHUNK = 256
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (B, H, dk, dv)
+    n: jnp.ndarray  # (B, H, dk)
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, li)
+    h: jnp.ndarray  # (B, li)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+QKV_BLOCK = 4  # xLSTM qkv_proj_blocksize: block-diagonal q/k/v projections
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d, li = cfg.d_model, cfg.lstm_inner
+    ks = jax.random.split(key, 7)
+    nb = li // QKV_BLOCK
+    blk = lambda k: jax.random.normal(k, (nb, QKV_BLOCK, QKV_BLOCK), jnp.float32) * (
+        QKV_BLOCK**-0.5
+    )
+    return {
+        "up_x": dense_init(ks[0], d, li),
+        "up_z": dense_init(ks[1], d, li),
+        "wq": blk(ks[2]),
+        "wk": blk(ks[3]),
+        "wv": blk(ks[4]),
+        "w_if": dense_init(ks[5], li, 2 * cfg.n_heads),  # input & forget gates/head
+        "norm": rmsnorm_init(li),
+        "down": dense_init(ks[6], li, d),
+    }
+
+
+def _blockdiag_proj(x, w, prec):
+    """x: (B, S, li) -> (B, S, li) through block-diagonal (nb, bs, bs) w."""
+    B, S, li = x.shape
+    nb, bs, _ = w.shape
+    xb = x.reshape(B, S, nb, bs)
+    out = rr_einsum("bsng,ngh->bsnh", xb, w, prec)
+    return out.reshape(B, S, li)
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state: MLSTMState, chunk=None):
+    """q,k,v: (B, S, H, dh); log_i/log_f: (B, S, H) (log-sigmoid gates).
+    Chunkwise gated linear attention. Returns (y, new_state)."""
+    B, S, H, dh = q.shape
+    chunk = min(chunk or LSTM_CHUNK, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def reshape_c(x):
+        return jnp.moveaxis(x.reshape(B, nc, chunk, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)
+    lic, lfc = reshape_c(log_i), reshape_c(log_f)
+
+    def chunk_body(carry, inp):
+        C, n = carry  # (B,H,dk,dv), (B,H,dk)
+        qb, kb, vb, li_b, lf_b = inp  # (B,c,H,*) each
+
+        F = jnp.cumsum(lf_b, axis=1)  # (B,c,H) log decay from chunk start (<=0)
+        Ftot = F[:, -1]  # (B,H)
+
+        # inter-chunk: contribution of the carried state, decayed (exp(F)<=1)
+        q_dec = qb * jnp.exp(F)[..., None]  # (B,c,H,dk)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_dec, C)
+        n_inter = jnp.einsum("bchk,bhk->bch", q_dec, n)
+
+        # intra-chunk: pairwise-stable decay D[t,s] = exp(F_t - F_s + li_s),
+        # masked to s<=t so every exponent is <= 0 (never overflows).
+        Ft = jnp.moveaxis(F, 1, 2)  # (B,H,c)
+        lit = jnp.moveaxis(li_b, 1, 2)  # (B,H,c)
+        rel = Ft[..., :, None] - Ft[..., None, :] + lit[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(mask[None, None], jnp.exp(jnp.minimum(rel, 0.0)), 0.0)
+        qk = jnp.einsum("bchk,bshk->bhcs", qb, kb)
+        logits = qk * D
+        y_intra = jnp.einsum("bhcs,bshv->bchv", logits, vb)
+        n_intra = jnp.moveaxis(jnp.sum(logits, axis=-1), 1, 2)  # (B,c,H)
+
+        y = y_inter + y_intra
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        y = y / denom
+
+        # state update to chunk end: weights exp(Ftot - F_s + li_s) <= 1
+        w_end = jnp.exp(jnp.minimum(Ftot[:, None] - F + li_b, 0.0))[..., None]
+        kv = jnp.einsum("bshk,bshv->bhkv", kb * w_end, vb)
+        C_new = C * jnp.exp(Ftot)[..., None, None] + kv
+        n_new = n * jnp.exp(Ftot)[..., None] + jnp.sum(kb * w_end, axis=1)
+        return (C_new, n_new), y
+
+    (C, n), ys = jax.lax.scan(chunk_body, (state.C, state.n), (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dh)
+    return y, MLSTMState(C=C, n=n)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
+    B, S, d = x.shape
+    H, li = cfg.n_heads, cfg.lstm_inner
+    dh = li // H
+    xi = silu(rr_dot(x, p["up_x"], prec))
+    z = rr_dot(x, p["up_z"], prec)
+
+    q = _blockdiag_proj(xi, p["wq"], prec).reshape(B, S, H, dh)
+    k = _blockdiag_proj(xi, p["wk"], prec).reshape(B, S, H, dh) * (dh**-0.5)
+    v = _blockdiag_proj(xi, p["wv"], prec).reshape(B, S, H, dh)
+    gates = rr_dot(xi, p["w_if"], prec).reshape(B, S, H, 2)
+    log_i = jax.nn.log_sigmoid(gates[..., 0])
+    log_f = jax.nn.log_sigmoid(gates[..., 1])
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    y, new_state = _mlstm_chunked(q, k, v, log_i, log_f, state)
+    y = y.reshape(B, S, li)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * silu(z)
+    return rr_dot(y, p["down"], prec), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H = cfg.n_heads
+    dh = cfg.lstm_inner // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+    )
+
+
+def mlstm_decode(p, x, state: MLSTMState, cfg: ModelConfig, prec: PrecisionConfig):
+    return mlstm_apply(p, x, cfg, prec, state=state)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d, li, H = cfg.d_model, cfg.lstm_inner, cfg.n_heads
+    dh = li // H
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * li),  # i, f, z, o pre-activations
+        "r_blk": jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32) * (dh**-0.5),
+        "norm": rmsnorm_init(li),
+        "down": dense_init(ks[2], li, d),
+    }
+
+
+def _slstm_step(p, carry, wx, cfg: ModelConfig):
+    c, h = carry  # (B, li) each
+    B = c.shape[0]
+    H = cfg.n_heads
+    dh = cfg.lstm_inner // H
+    hb = h.reshape(B, H, dh)
+    rec = jnp.einsum("ghkv,bhk->gbhv", p["r_blk"], hb).reshape(4, B, H * dh)
+    pre = wx.reshape(B, 4, -1).transpose(1, 0, 2) + rec  # (4, B, li)
+    i = jax.nn.sigmoid(pre[0])
+    f = jax.nn.sigmoid(pre[1])
+    z = jnp.tanh(pre[2])
+    o = jax.nn.sigmoid(pre[3])
+    c_new = f * c + i * z
+    h_new = o * jnp.tanh(c_new)
+    return (c_new, h_new), h_new
+
+
+def slstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
+    B, S, d = x.shape
+    li = cfg.lstm_inner
+    wx = rr_dot(x, p["w_in"], prec)  # (B, S, 4*li) gate pre-activations
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(carry, wxt):
+        return _slstm_step(p, carry, wxt, cfg)
+
+    (c, h), hs = jax.lax.scan(step, (state.c, state.h), jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)  # (B, S, li)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return rr_dot(y, p["down"], prec), SLSTMState(c=c, h=h)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    li = cfg.lstm_inner
+    return SLSTMState(c=jnp.zeros((batch, li), jnp.float32), h=jnp.zeros((batch, li), jnp.float32))
+
+
+def slstm_decode(p, x, state: SLSTMState, cfg: ModelConfig, prec: PrecisionConfig):
+    return slstm_apply(p, x, cfg, prec, state=state)

@@ -1,0 +1,7 @@
+"""PDE solvers — the paper's two case-study applications."""
+
+from .heat1d import HeatConfig, heat_step
+from .heat1d import simulate as simulate_heat
+from .precision_ops import pdiv, pmul, pstore
+from .swe2d import SWEConfig, swe_step
+from .swe2d import simulate as simulate_swe

@@ -1,0 +1,108 @@
+"""1D heat equation, explicit finite differences (paper §2, Figs. 1/2/7).
+
+    du/dt = alpha * d2u/dx2,   u'[i] = u[i] + alpha*(dt/dx^2)*lap[i]
+
+The update is decomposed into the two multiplications a scalar pipeline
+issues —  ``flux = alpha * lap`` then ``upd = flux * dtodx2``  — because that
+is where the paper's precision story lives: with a physical diffusivity
+(alpha ~ 1e-5 m^2/s, e.g. steel) the intermediate ``alpha * lap`` falls below
+E5M10's subnormal floor late in the simulation (paper §3.1: "using E6M9 for
+the multiplications whose operands are smaller than 0.0001 can compute
+correctly"), so standard half freezes/distorts the dynamics, while R2F2
+re-allocates flexible bits to the exponent and tracks the true solution.
+The ``exp`` initialization exercises the *overflow* failure instead (initial
+values beyond 65504).
+
+Solver state is stored in the policy's format every step (16-bit storage in
+the paper's system); additions run in f32 (the FPU adder).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+
+from .precision_ops import pmul
+
+__all__ = ["HeatConfig", "initial_condition", "heat_step", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeatConfig:
+    nx: int = 512
+    length: float = 1.0
+    alpha: float = 1e-5  # physical diffusivity (steel ~ 1.2e-5 m^2/s)
+    cfl: float = 0.4  # r = alpha*dt/dx^2
+    init: str = "sin"  # "sin" | "exp" (the paper's two initializations)
+    amplitude: float = 500.0  # paper Fig. 2: values reach +-500 with sin init
+    modes: int = 3  # sin harmonics
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.nx
+
+    @property
+    def dt(self) -> float:
+        return self.cfl * self.dx * self.dx / self.alpha
+
+    @property
+    def dtodx2(self) -> float:
+        return self.dt / (self.dx * self.dx)
+
+
+def initial_condition(cfg: HeatConfig) -> jnp.ndarray:
+    x = jnp.linspace(0.0, cfg.length, cfg.nx, dtype=jnp.float32)
+    if cfg.init == "sin":
+        u0 = cfg.amplitude * jnp.sin(cfg.modes * jnp.pi * x / cfg.length)
+    elif cfg.init == "exp":
+        # localized gaussian: decays into the underflow regime where E5M10's
+        # flux products flush (progressive failure; sin shows the freeze)
+        u0 = 2000.0 * jnp.exp(-(((x - 0.5 * cfg.length) / (0.05 * cfg.length)) ** 2))
+    else:
+        raise ValueError(f"unknown init {cfg.init!r}")
+    return u0.at[0].set(0.0).at[-1].set(0.0)
+
+
+def heat_step(u, cfg: HeatConfig, prec: PrecisionConfig):
+    """One explicit-FD step under the precision policy.
+
+    State stays f32, exactly like the paper's HLS system: the R2F2 unit
+    "reads and converts from single precision ... and converts back" (§5.2)
+    around each multiplication; only the multiplies see the low bitwidth.
+    """
+    lap = u[:-2] - 2.0 * u[1:-1] + u[2:]  # adds in f32
+    flux = pmul(jnp.float32(cfg.alpha), lap, prec)  # multiplier 1
+    upd = pmul(flux, jnp.float32(cfg.dtodx2), prec)  # multiplier 2
+    interior = u[1:-1] + upd
+    return jnp.concatenate([u[:1], interior, u[-1:]])
+
+
+def simulate(
+    cfg: HeatConfig,
+    prec: PrecisionConfig,
+    steps: int,
+    snapshot_every: Optional[int] = None,
+    u0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run ``steps`` updates. Returns (final_state, snapshots)."""
+    u0 = initial_condition(cfg) if u0 is None else jnp.asarray(u0, jnp.float32)
+    every = snapshot_every or max(1, steps // 8)
+
+    def body(u, _):
+        return heat_step(u, cfg, prec), None
+
+    def outer(u, _):
+        u, _ = jax.lax.scan(body, u, None, length=every)
+        return u, u
+
+    n_out = steps // every
+    u_fin, snaps = jax.lax.scan(outer, u0, None, length=n_out)
+    rem = steps - n_out * every
+    if rem:
+        u_fin, _ = jax.lax.scan(body, u_fin, None, length=rem)
+    return u_fin, snaps

@@ -1,0 +1,68 @@
+"""Elementwise precision-policy operations used by the PDE solvers.
+
+The paper's system multiplies through R2F2 (or a fixed-format unit) while
+additions run on a conventional (wider-accumulator) adder and state is
+*stored* in the low-bitwidth format. These three primitives encode that
+split so the solvers read like the numerics they implement:
+
+  pmul(a, b, cfg)  — a multiplication issued to the policy's multiplier
+  pstore(x, cfg)   — state written back to low-bitwidth storage
+  pdiv(a, b, cfg)  — division; R2F2 is a multiplier, so division stays in
+                     the substrate precision (f32) under every rr mode and
+                     is format-rounded only for fixed-format units.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.flexformat import quantize_em
+from repro.core.policy import PrecisionConfig
+from repro.core.r2f2 import r2f2_multiply
+
+__all__ = ["pmul", "pstore", "pdiv"]
+
+
+def pmul(a, b, cfg: PrecisionConfig):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if cfg.mode == "f32":
+        return a * b
+    if cfg.mode in ("bf16", "deploy"):
+        return (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)).astype(jnp.float32)
+    if cfg.mode == "fixed":
+        e, m = cfg.fixed_em
+        p = quantize_em(a, e, m) * quantize_em(b, e, m)
+        return quantize_em(p, e, m)
+    # rr modes: per-tensor runtime split (PDE fields are one locality cluster;
+    # the Pallas kernels do the same per VMEM block)
+    out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
+    return out
+
+
+def pstore(x, cfg: PrecisionConfig):
+    x = jnp.asarray(x, jnp.float32)
+    if cfg.mode == "f32":
+        return x
+    if cfg.mode in ("bf16", "deploy"):
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    if cfg.mode == "fixed":
+        e, m = cfg.fixed_em
+        return quantize_em(x, e, m)
+    # rr storage: minimal-k format for the live range (paper Fig. 4a layout)
+    from repro.core.r2f2 import _tile_max_exp, select_k_operand  # local to avoid cycle
+
+    me, _ = _tile_max_exp(x, None)
+    k = select_k_operand(me, cfg.fmt)
+    return quantize_em(x, cfg.fmt.eb + k, cfg.fmt.mb + cfg.fmt.fx - k)
+
+
+def pdiv(a, b, cfg: PrecisionConfig):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if cfg.mode == "fixed":
+        e, m = cfg.fixed_em
+        return quantize_em(quantize_em(a, e, m) / quantize_em(b, e, m), e, m)
+    if cfg.mode in ("bf16", "deploy"):
+        return (a.astype(jnp.bfloat16) / b.astype(jnp.bfloat16)).astype(jnp.float32)
+    return a / b

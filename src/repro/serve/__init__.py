@@ -1,0 +1,3 @@
+"""Serving: batched prefill + greedy decode."""
+
+from .decode import generate

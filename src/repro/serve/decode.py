@@ -1,0 +1,52 @@
+"""Batched serving loop: prefill once, then jit-compiled greedy decode.
+
+The decode step is the same ``serve_step`` the dry-run lowers for the
+decode_32k / long_500k cells; this module adds the host-side loop and a
+minimal static-batch scheduler (requests padded to the batch; finished
+sequences keep decoding into a sink — the standard static-batching serving
+baseline, which the dry-run's KV sharding story is built around).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.models import init_decode_state, prefill
+from repro.models.config import ModelConfig
+from repro.train.step import make_serve_step
+
+__all__ = ["generate"]
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prec: PrecisionConfig,
+    prompts: jnp.ndarray,  # (B, S_prompt) int32
+    max_new_tokens: int = 32,
+    max_len: Optional[int] = None,
+    window: Optional[int] = None,
+    eos_id: Optional[int] = None,
+):
+    """Greedy generation. Returns (B, max_new_tokens) int32."""
+    B, S = prompts.shape
+    max_len = max_len or (S + max_new_tokens)
+
+    logits, caches = prefill(params, cfg, prec, tokens=prompts, max_len=max_len, window=window)
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+
+    step_fn = jax.jit(make_serve_step(cfg, prec, window=window))
+    out = [next_tok]
+    done = jnp.zeros((B, 1), bool)
+    for i in range(max_new_tokens - 1):
+        tok = out[-1]
+        nxt, caches = step_fn(params, caches, tok, jnp.int32(S + i))
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+            nxt = jnp.where(done, eos_id, nxt)
+        out.append(nxt)
+    return jnp.concatenate(out, axis=1)

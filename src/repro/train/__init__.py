@@ -1,0 +1,12 @@
+"""Training substrate: optimizers, train/serve step builders, sharding rules."""
+
+from .optimizer import OptConfig, lr_at, opt_init, opt_update
+from .step import (
+    TrainConfig,
+    batch_pspec,
+    init_train_state,
+    make_serve_step,
+    make_train_step,
+    params_pspec_tree,
+    state_pspec_tree,
+)

@@ -1,0 +1,152 @@
+"""Optimizers (pure-JAX, no external deps): AdamW and Adafactor.
+
+AdamW is the default; Adafactor (factored second moment, no first moment by
+default) is the memory-tier option that lets llama3-405b training states fit
+a single 256-chip pod (see EXPERIMENTS.md §Perf — optimizer-state bytes are
+a roofline memory term at that scale).
+
+All state is a pytree mirroring ``params`` and shards identically to the
+parameters (FSDP over ('pod','data')), so ZeRO-3 falls out of the sharding
+rules rather than being a separate mechanism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # "adamw" | "adafactor"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # adafactor
+    factored_min: int = 128  # factor second moment only for dims >= this
+
+
+def lr_at(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to 10%."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * prog)
+    return cfg.lr * warm * cos
+
+
+def _is_factored(shape, cfg: OptConfig):
+    return len(shape) >= 2 and shape[-1] >= cfg.factored_min and shape[-2] >= cfg.factored_min
+
+
+def opt_init(params, cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return {
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if cfg.kind == "adafactor":
+
+        def second_moment(p):
+            if _is_factored(p.shape, cfg):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p)}
+
+        return {
+            "v": jax.tree_util.tree_map(second_moment, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def opt_update(grads, state, params, cfg: OptConfig, step):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    lr = lr_at(cfg, step)
+
+    if cfg.kind == "adamw":
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1**c
+        bc2 = 1.0 - cfg.b2**c
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = cfg.b1 * mu + (1 - cfg.b1) * g
+            nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+            p = p - lr * (u + cfg.weight_decay * p)
+            return p, mu, nu
+
+        flat, tdef = jax.tree_util.tree_flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        muf = tdef.flatten_up_to(state["mu"])
+        nuf = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat, gflat, muf, nuf)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {
+            "mu": tdef.unflatten([o[1] for o in out]),
+            "nu": tdef.unflatten([o[2] for o in out]),
+            "count": count,
+        }
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    # ---- adafactor ----
+    count = state["count"] + 1
+    decay = 1.0 - (count.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in v:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vhat = decay * v["v"] + (1 - decay) * g2
+            new_v = {"v": vhat}
+        u = g / jnp.sqrt(vhat + 1e-30)
+        # update clipping (Adafactor RMS rule)
+        u = u / jnp.maximum(1.0, _rms(u))
+        p = p - lr * (u + cfg.weight_decay * p)
+        return p, new_v
+
+    flat, tdef = jax.tree_util.tree_flatten(params)
+    gflat = tdef.flatten_up_to(grads)
+    vf = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat, gflat, vf)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"v": tdef.unflatten([o[1] for o in out]), "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)

@@ -1,0 +1,261 @@
+"""train_step / serve_step builders + parameter sharding rules.
+
+Sharding strategy (DESIGN.md §6):
+  - weights: TP on the 'model' axis (FFN hidden, attention head block,
+    experts, vocab) x FSDP/ZeRO-3 on ('pod','data') for the other big dim;
+  - optimizer state: mirrors parameter sharding (ZeRO-3 falls out);
+  - activations: constrained on (batch -> ('pod','data')); internal layouts
+    are left to XLA's sharding propagation from the weight specs, which
+    avoids forcing uneven head splits (e.g. 40 or 56 q-heads on a 16-wide
+    model axis) and lets SPMD insert the cheapest collectives;
+  - decode KV cache: sequence axis on 'model' (flash-decoding softmax).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.policy import PrecisionConfig
+from repro.models import decode_step, init_decode_state, lm_loss, model_init
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+__all__ = [
+    "TrainConfig",
+    "param_pspec",
+    "params_pspec_tree",
+    "state_pspec_tree",
+    "batch_pspec",
+    "make_train_step",
+    "make_serve_step",
+    "init_train_state",
+]
+
+_FSDP = ("pod", "data")
+
+# name -> spec for the *last two-or-three* dims of 2D/3D weights
+_RULES_2D = {
+    "embed": ("model", _FSDP),
+    "head": (_FSDP, "model"),
+    "frontend_proj": (None, _FSDP),
+    "wq": (_FSDP, "model"),
+    "wk": (_FSDP, "model"),
+    "wv": (_FSDP, "model"),
+    "wo": ("model", _FSDP),
+    "gate": (_FSDP, "model"),
+    "up": (_FSDP, "model"),
+    "down": ("model", _FSDP),
+    "router": (_FSDP, None),
+    "in_proj": (_FSDP, "model"),
+    "conv_w": (None, "model"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "A_log": ("model", None),
+    "out_proj": ("model", _FSDP),
+    "up_x": (_FSDP, "model"),
+    "up_z": (_FSDP, "model"),
+    "w_if": ("model", None),
+    "w_in": (_FSDP, None),
+}
+
+_RULES_3D = {  # MoE expert-stacked weights: experts on 'model' (EP),
+    # FSDP on the d_model dim. (A/B-measured on qwen3 train_4k, §Perf:
+    # f-dim FSDP regressed the collective term 180s->241s; einsum one-hot
+    # dispatch traded 180s coll for +252s of quadratic dispatch FLOPs.)
+    "gate": ("model", _FSDP, None),
+    "up": ("model", _FSDP, None),
+    "down": ("model", None, _FSDP),
+}
+
+
+def _filter_axes(spec, mesh: Mesh):
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in mesh.axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(s if s in mesh.axis_names else None)
+    return tuple(out)
+
+
+def param_pspec(path, leaf, mesh: Mesh) -> P:
+    names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = names[-1] if names else None
+    scanned = "blocks" in names  # leading group dim from scan stacking
+    nd = leaf.ndim - (1 if scanned else 0)
+
+    spec = None
+    if name in ("wq", "wk", "wv") and nd == 3:
+        spec = ("model", None, None)  # mLSTM block-diagonal projections
+    elif nd == 3 and name in _RULES_3D:
+        spec = _RULES_3D[name]
+    elif nd == 2 and name in _RULES_2D:
+        spec = _RULES_2D[name]
+    elif name == "r_blk":
+        spec = (None,) * nd
+    else:
+        spec = (None,) * nd  # norms, biases, scalars: replicated
+
+    spec = _filter_axes(spec, mesh)
+    if scanned:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def params_pspec_tree(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, mesh), params
+    )
+
+
+def state_pspec_tree(state, params_spec, mesh: Mesh):
+    """Optimizer/train state mirrors parameter sharding; counters replicated."""
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", None) for k in path]
+        if names and names[0] == "params":
+            return param_pspec(path[1:], leaf, mesh)
+        if names and names[0] == "opt":
+            # mu/nu/v mirror params; factored vr/vc keep the surviving dims
+            inner = [n for n in names[1:] if n not in ("mu", "nu", "v", "vr", "vc")]
+            # reconstruct a pseudo-path for the rule lookup
+            class _K:  # minimal DictKey stand-in
+                def __init__(self, key):
+                    self.key = key
+
+            pseudo = [_K(n) for n in inner if n is not None]
+            if names[-1] in ("vr", "vc"):
+                return P(*((None,) * leaf.ndim))  # factored: replicate (small)
+            if leaf.ndim == 0:
+                return P()
+            return param_pspec(pseudo, leaf, mesh)
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def batch_pspec(batch_tree, mesh: Mesh):
+    fsdp = tuple(a for a in _FSDP if a in mesh.axis_names)
+    return jax.tree_util.tree_map(
+        lambda leaf: P(fsdp if fsdp else None, *((None,) * (leaf.ndim - 1))), batch_tree
+    )
+
+
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1  # gradient accumulation
+    remat: bool = True
+    window: Optional[int] = None
+    carry_dtype: Optional[str] = None  # "bf16" stores scan boundaries in bf16
+    grad_comm: Optional[str] = None  # None | "bf16" | "rr16" — gradient
+    # compression for the cross-pod all-reduce. "rr16" quantizes each gradient
+    # tensor to the paper's 16-bit flexible format (per-tensor runtime split):
+    # halves DCI payload vs f32 with ~12 mantissa bits where the range is
+    # narrow — a beyond-paper application of R2F2 (DESIGN.md §6).
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    params = model_init(key, cfg)
+    return {
+        "params": params,
+        "opt": opt_init(params, tcfg.opt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    prec: PrecisionConfig,
+    tcfg: TrainConfig,
+    param_shardings=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit at
+    the call site with mesh-specific shardings.
+
+    ``param_shardings``: optional pytree of NamedShardings matching params.
+    Pinning gradients to the parameter sharding forces XLA to REDUCE-SCATTER
+    the data-parallel gradient sum instead of all-reducing to a replicated
+    gradient (§Perf: unpinned microbatch accumulators made XLA all-reduce
+    full f32 expert/param gradients per microbatch — TiBs of traffic).
+    """
+    prec_rr16 = dataclasses.replace(prec, mode="rr_tile")
+
+    carry = jnp.bfloat16 if tcfg.carry_dtype == "bf16" else None
+
+    def pin(grads):
+        if param_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, param_shardings
+        )
+
+    def loss_fn(params, batch):
+        return lm_loss(
+            params, batch, cfg, prec, window=tcfg.window, remat=tcfg.remat,
+            carry_dtype=carry,
+        )
+
+    def train_step(state, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def micro(acc, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(state["params"], mbatch)
+                g = pin(g)
+                return (
+                    acc[0] + l / mb,
+                    pin(jax.tree_util.tree_map(lambda a, b: a + b / mb, acc[1], g)),
+                ), None
+
+            zeros = pin(jax.tree_util.tree_map(jnp.zeros_like, state["params"]))
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch
+            )
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), zeros), split)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+            grads = pin(grads)
+
+        if tcfg.grad_comm == "bf16":
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+            )
+        elif tcfg.grad_comm == "rr16":
+            from repro.core.rr_dot import rr_operand  # local: avoid import cycle
+
+            grads = jax.tree_util.tree_map(
+                lambda g: rr_operand(g, prec_rr16)[0], grads
+            )
+
+        new_params, new_opt, metrics = opt_update(
+            grads, state["opt"], state["params"], tcfg.opt, state["step"]
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, prec: PrecisionConfig, window: Optional[int] = None):
+    """Returns serve_step(params, caches, tokens, pos) -> (next_tokens, caches).
+    One greedy decode step against a filled KV cache."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = decode_step(params, caches, tokens, pos, cfg, prec, window=window)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return serve_step

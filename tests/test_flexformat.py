@@ -1,0 +1,139 @@
+"""Unit + property tests for the flexible floating-point format substrate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flexformat as ff
+
+FORMATS = [(5, 10), (5, 9), (5, 8), (6, 9), (3, 12), (7, 8), (4, 11), (8, 7)]
+
+
+def _finite_floats(max_mag=2.0**100):
+    return st.floats(
+        min_value=-max_mag,
+        max_value=max_mag,
+        allow_nan=False,
+        allow_infinity=False,
+        width=32,
+    )
+
+
+class TestBitExactness:
+    def test_e5m10_matches_float16(self):
+        rng = np.random.default_rng(0)
+        x = np.concatenate(
+            [
+                rng.uniform(-70000, 70000, 50000),
+                rng.uniform(-1e-4, 1e-4, 50000),
+                (10.0 ** rng.uniform(-8, 5, 50000)) * rng.choice([-1, 1], 50000),
+                [0.0, -0.0, 65504.0, 65520.0, 65519.99, 6e-8, 2**-24, np.inf, -np.inf],
+            ]
+        ).astype(np.float32)
+        y = np.asarray(ff.quantize_em(x, 5, 10))
+        ref = x.astype(np.float16).astype(np.float32)
+        np.testing.assert_array_equal(y, ref)
+
+    def test_paper_max_values(self):
+        # §4.1: E5M10 max 65504; <3,8,4> at k=4 (E7M8) max 1.8410715e19
+        assert float(ff.max_normal(5, 10)) == 65504.0
+        assert float(ff.max_normal(7, 8)) == pytest.approx(1.8410715e19, rel=1e-6)
+
+    def test_identity_at_f32(self):
+        rng = np.random.default_rng(1)
+        x = (10.0 ** rng.uniform(-37, 38, 20000) * rng.choice([-1, 1], 20000)).astype(
+            np.float32
+        )
+        y = np.asarray(ff.quantize_em(x, 8, 23))
+        np.testing.assert_array_equal(y, x)
+
+    def test_redundancy_paper_example(self):
+        # 8-bit exponent 10000111 (=2**8) is redundant; also values < 1 mirror
+        assert bool(ff.exponent_redundant(jnp.float32(2.0**8), 8))
+        assert not bool(ff.exponent_redundant(jnp.float32(2.0**100), 8))
+        assert bool(ff.exponent_redundant(jnp.float32(0.9), 8))
+        assert not bool(ff.exponent_redundant(jnp.float32(2.0**-100), 8))
+
+
+class TestFlags:
+    def test_overflow_underflow_flags(self):
+        y, o, u = ff.quantize_em_with_flags(
+            np.array([70000.0, 1e-8, 1.0, 0.0, -70000.0], np.float32), 5, 10
+        )
+        assert list(np.asarray(o)) == [True, False, False, False, True]
+        assert list(np.asarray(u)) == [False, True, False, False, False]
+        assert np.isinf(np.asarray(y)[0]) and np.asarray(y)[4] == -np.inf
+
+
+@pytest.mark.parametrize("e,m", FORMATS)
+class TestPerFormat:
+    def test_idempotent(self, e, m):
+        rng = np.random.default_rng(e * 100 + m)
+        x = (10.0 ** rng.uniform(-20, 15, 5000) * rng.choice([-1, 1], 5000)).astype(
+            np.float32
+        )
+        y1 = np.asarray(ff.quantize_em(x, e, m))
+        y2 = np.asarray(ff.quantize_em(y1, e, m))
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_pack_unpack_roundtrip(self, e, m):
+        # family <2, m, e-2> at k = e-2 gives exactly E(e)M(m)
+        fmt = ff.FlexFormat(2, m, e - 2)
+        k = e - fmt.eb
+        assert fmt.em(k) == (e, m)
+        rng = np.random.default_rng(7)
+        x = (10.0 ** rng.uniform(-15, 10, 5000) * rng.choice([-1, 1], 5000)).astype(
+            np.float32
+        )
+        q = np.asarray(ff.quantize_em(x, e, m))
+        payload = ff.pack_r2f2(q, fmt, k)
+        back = np.asarray(ff.unpack_r2f2(payload, fmt, k))
+        np.testing.assert_array_equal(back, q)
+        assert int(np.asarray(payload).max()) < 2 ** fmt.total_bits
+
+    def test_error_bound_half_ulp(self, e, m):
+        """|q(x) - x| <= 0.5 ulp(x) for in-range normals (RNE)."""
+        rng = np.random.default_rng(9)
+        emax = 2 ** (e - 1) - 1
+        emin = 2 - 2 ** (e - 1)
+        exps = rng.integers(emin + 1, emax - 1, 4000)
+        mant = rng.uniform(1, 2, 4000)
+        x = (mant * (2.0**exps.astype(np.float64))).astype(np.float32)
+        y = np.asarray(ff.quantize_em(x, e, m), np.float64)
+        ulp = 2.0 ** (exps.astype(np.float64) - m)
+        assert np.all(np.abs(y - x.astype(np.float64)) <= 0.5 * ulp + 1e-45)
+
+
+@settings(max_examples=300, deadline=None)
+@given(x=_finite_floats(), e=st.integers(2, 8), m=st.integers(1, 12))
+def test_prop_idempotent_and_monotone_zero(x, e, m):
+    xq = float(ff.quantize_em(np.float32(x), e, m))
+    xqq = float(ff.quantize_em(np.float32(xq), e, m))
+    assert xq == xqq or (np.isnan(xq) and np.isnan(xqq))
+    # sign preservation
+    if xq != 0 and np.isfinite(xq):
+        assert np.sign(xq) == np.sign(x)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    a=_finite_floats(max_mag=2.0**50),
+    b=_finite_floats(max_mag=2.0**50),
+    e=st.integers(3, 8),
+    m=st.integers(2, 12),
+)
+def test_prop_monotonicity(a, b, e, m):
+    """x <= y  =>  q(x) <= q(y) (RNE is monotone)."""
+    lo, hi = (a, b) if a <= b else (b, a)
+    ql = float(ff.quantize_em(np.float32(lo), e, m))
+    qh = float(ff.quantize_em(np.float32(hi), e, m))
+    assert ql <= qh
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=_finite_floats(max_mag=2.0**66), e=st.integers(2, 8), m=st.integers(1, 12))
+def test_prop_quantize_within_format_bounds(x, e, m):
+    q = float(ff.quantize_em(np.float32(x), e, m))
+    if np.isfinite(q):
+        assert abs(q) <= float(ff.max_normal(e, m))

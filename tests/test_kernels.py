@@ -1,0 +1,120 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracle,
+swept over shapes, block sizes, and format configurations."""
+
+import numpy as np
+import pytest
+
+from repro.core.flexformat import FlexFormat
+from repro.kernels import ops, ref
+
+FMTS = [FlexFormat(3, 9, 3), FlexFormat(3, 8, 4), FlexFormat(3, 7, 3), FlexFormat(5, 10, 0)]
+
+
+def _data(shape, scale_exp_range=(-3, 4), seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(0, 1, shape) * 10.0 ** rng.integers(*scale_exp_range, shape)
+    ).astype(np.float32)
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("shape", [(256, 256), (512, 256), (256, 768), (1024, 1024)])
+    @pytest.mark.parametrize("fmt", FMTS, ids=str)
+    def test_matches_ref(self, shape, fmt):
+        x = _data(shape, seed=hash(shape) % 1000)
+        yk, kk = ops.r2f2_quantize(x, fmt)
+        yr, kr = ref.r2f2_quantize_ref(x, fmt=fmt)
+        np.testing.assert_array_equal(np.asarray(yk), np.asarray(yr))
+        np.testing.assert_array_equal(np.asarray(kk), np.asarray(kr))
+
+    @pytest.mark.parametrize("block", [(128, 128), (256, 128), (128, 256)])
+    def test_block_sweep(self, block):
+        x = _data((512, 512), seed=5)
+        fmt = FMTS[0]
+        yk, _ = ops.r2f2_quantize(x, fmt, block=block)
+        yr, _ = ref.r2f2_quantize_ref(x, fmt=fmt, block=block)
+        np.testing.assert_array_equal(np.asarray(yk), np.asarray(yr))
+
+    def test_k_respects_range(self):
+        x = np.full((256, 256), 1e6, np.float32)  # big values: k must grow
+        _, k = ops.r2f2_quantize(x, FMTS[0])
+        assert int(np.asarray(k).max()) == 3
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize(
+        "mnk", [(128, 128, 128), (256, 128, 384), (128, 256, 128), (384, 384, 256)]
+    )
+    @pytest.mark.parametrize("fmt", FMTS[:2], ids=str)
+    def test_matches_ref(self, mnk, fmt):
+        m, n, k = mnk
+        a = _data((m, k), (-2, 2), seed=m + n)
+        b = _data((k, n), (-2, 2), seed=k)
+        ck = ops.r2f2_matmul(a, b, fmt)
+        cr = ref.r2f2_matmul_ref(a, b, fmt=fmt)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=0, atol=0)
+
+    def test_round_products_mode(self):
+        a = _data((128, 128), (-1, 1), seed=1)
+        b = _data((128, 128), (-1, 1), seed=2)
+        fmt = FMTS[0]
+        ck = ops.r2f2_matmul(a, b, fmt, blocks=(64, 64, 64), round_products=True)
+        cr = ref.r2f2_matmul_ref(a, b, fmt=fmt, blocks=(64, 64, 64), round_products=True)
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+    def test_close_to_f32(self):
+        rng = np.random.default_rng(9)
+        a = rng.normal(0, 1, (256, 256)).astype(np.float32)
+        b = rng.normal(0, 0.05, (256, 256)).astype(np.float32)
+        c = np.asarray(ops.r2f2_matmul(a, b, FMTS[0]))
+        rel = np.linalg.norm(c - a @ b) / np.linalg.norm(a @ b)
+        assert rel < 1e-3  # 12-bit mantissa at k=0
+
+
+class TestHeatKernel:
+    @pytest.mark.parametrize("steps", [1, 10, 100])
+    def test_matches_ref(self, steps):
+        u0 = (
+            500 * np.sin(np.linspace(0, 3 * np.pi, 512))[None] * np.ones((8, 1))
+        ).astype(np.float32)
+        fmt = FMTS[0]
+        hk = ops.heat_stencil(u0, 1e-5, 4e4, fmt, steps=steps)
+        hr = ref.heat_stencil_ref(u0, 1e-5, 4e4, fmt=fmt, steps=steps)
+        np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+
+    def test_matches_solver(self):
+        """The fused kernel must agree with repro.pde.heat1d exactly."""
+        from repro.core.policy import PRESETS
+        from repro.pde import HeatConfig, simulate_heat
+        from repro.pde.heat1d import initial_condition
+
+        cfg = HeatConfig(nx=256)
+        u0 = np.tile(np.asarray(initial_condition(cfg)), (8, 1))
+        k_out = ops.heat_stencil(u0, cfg.alpha, cfg.dtodx2, FMTS[0], steps=50)
+        sol, _ = simulate_heat(cfg, PRESETS["r2f2_16"], 50)
+        np.testing.assert_array_equal(np.asarray(k_out)[0], np.asarray(sol))
+
+
+class TestSWEFluxKernel:
+    @pytest.mark.parametrize("shape", [(64, 128), (128, 256), (128, 128)])
+    def test_matches_ref(self, shape):
+        rng = np.random.default_rng(11)
+        q3 = (500.0 + 100 * rng.normal(size=shape)).astype(np.float32)
+        q1 = (q3 * rng.normal(0, 5, shape)).astype(np.float32)
+        fmt = FMTS[0]
+        fk = ops.swe_flux(q1, q3, fmt)
+        fr = ref.swe_flux_ref(q1, q3, fmt=fmt)
+        np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+
+    def test_matches_solver_equation(self):
+        """Kernel == repro.pde.swe2d._momentum_flux_x under rr_tile policy."""
+        from repro.core.policy import PRESETS
+        from repro.pde.swe2d import _momentum_flux_x
+
+        rng = np.random.default_rng(12)
+        q3 = (500.0 + 100 * rng.normal(size=(64, 128))).astype(np.float32)
+        q1 = (q3 * rng.normal(0, 5, (64, 128))).astype(np.float32)
+        fmt = FMTS[0]
+        fk = ops.swe_flux(q1, q3, fmt, block=(64, 128))
+        fs = _momentum_flux_x(q1, q3, PRESETS["r2f2_16"])
+        np.testing.assert_allclose(np.asarray(fk), np.asarray(fs), rtol=2e-3)

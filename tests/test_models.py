@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode consistency.
+
+Each assigned architecture instantiates a REDUCED config of the same family
+and runs one forward/train step asserting output shapes and no NaNs, plus a
+decode step against its cache/state (except encoder-only)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.core.policy import PRESETS
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    lm_loss,
+    model_init,
+    prefill,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    batch = {"labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.frontend:
+        batch["embeds"] = jax.random.normal(KEY, (B, S, cfg.frontend_dim))
+        if cfg.frontend == "vision":
+            batch["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = reduced(get_config(arch))
+        params = model_init(KEY, cfg)
+        batch = _batch(cfg)
+        tokens = batch.get("tokens")
+        logits, aux = forward(
+            params, cfg, PRESETS["deploy"], tokens=tokens, embeds=batch.get("embeds")
+        )
+        S_exp = 16 * (2 if (cfg.frontend == "vision") else 1)
+        assert logits.shape == (2, S_exp, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_train_step_no_nans(self, arch):
+        cfg = reduced(get_config(arch))
+        params = model_init(KEY, cfg)
+        batch = _batch(cfg)
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, batch, cfg, PRESETS["deploy"])
+        )(params)
+        assert bool(jnp.isfinite(loss))
+        gn = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(grads)))
+        assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+    def test_decode_step(self, arch):
+        cfg = reduced(get_config(arch))
+        if cfg.encoder_only:
+            pytest.skip("encoder-only: no decode")
+        params = model_init(KEY, cfg)
+        caches = init_decode_state(cfg, 2, 32)
+        tok = jax.random.randint(KEY, (2, 1), 0, cfg.vocab)
+        logits, new_caches = decode_step(
+            params, caches, tok, jnp.int32(0), cfg, PRESETS["deploy"]
+        )
+        assert logits.shape == (2, 1, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_rr_emulated_close_to_f32(self, arch):
+        cfg = reduced(get_config(arch))
+        params = model_init(KEY, cfg)
+        batch = _batch(cfg)
+        l_f32 = float(lm_loss(params, batch, cfg, PRESETS["f32"]))
+        l_rr = float(lm_loss(params, batch, cfg, PRESETS["r2f2_16"]))
+        assert abs(l_rr - l_f32) / abs(l_f32) < 0.05
+
+
+@pytest.mark.parametrize("arch", ["mistral-nemo-12b", "jamba-v0.1-52b", "xlstm-1.3b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode over a short prompt must match the full forward pass.
+
+    MoE archs need a drop-free capacity factor here: capacity-based dispatch
+    may drop tokens in the full pass while single-token decode never drops —
+    a known train/serve semantic of capacity MoE, not a bug (DESIGN.md §8).
+    """
+    import dataclasses
+
+    cfg = reduced(get_config(arch))
+    if cfg.moe_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = model_init(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab)
+    full, _ = forward(params, cfg, PRESETS["f32"], tokens=toks, remat=False)
+    caches = init_decode_state(cfg, 1, 8, cache_dtype=jnp.float32)
+    outs = []
+    for i in range(8):
+        lg, caches = decode_step(
+            params, caches, toks[:, i : i + 1], jnp.int32(i), cfg, PRESETS["f32"]
+        )
+        outs.append(lg[:, 0])
+    seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq), atol=3e-4)
+
+
+def test_prefill_then_decode_matches_forward():
+    """prefill(S tokens) + decode(token S) == forward(S+1 tokens) tail."""
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    params = model_init(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 9), 0, cfg.vocab)
+    full, _ = forward(params, cfg, PRESETS["f32"], tokens=toks, remat=False)
+    logits_p, caches = prefill(params, cfg, PRESETS["f32"], tokens=toks[:, :8], max_len=16, cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(full[:, :8]), np.asarray(logits_p), atol=3e-4)
+    lg, _ = decode_step(params, caches, toks[:, 8:9], jnp.int32(8), cfg, PRESETS["f32"])
+    np.testing.assert_allclose(np.asarray(full[:, 8]), np.asarray(lg[:, 0]), atol=3e-4)
+
+
+def test_flash_attention_matches_dense():
+    """Chunked online-softmax path == dense path."""
+    from repro.models import attention
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="t", n_layers=1, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64
+    )
+    p = attention.attn_init(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 2048, 64))
+    old = attention.FLASH_THRESHOLD
+    try:
+        attention.FLASH_THRESHOLD = 4096
+        dense, _ = attention.attn_apply(p, x, cfg, PRESETS["f32"])
+        attention.FLASH_THRESHOLD = 512
+        flash, _ = attention.attn_apply(p, x, cfg, PRESETS["f32"])
+    finally:
+        attention.FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash), atol=2e-5)

@@ -1,0 +1,91 @@
+"""PDE case studies: the paper's central claims as assertions."""
+
+import numpy as np
+import pytest
+
+from repro.core.policy import PRESETS
+from repro.pde import HeatConfig, SWEConfig, simulate_heat, simulate_swe
+
+
+@pytest.fixture(scope="module")
+def heat_ref():
+    cfg = HeatConfig(nx=128, init="sin")
+    ref, _ = simulate_heat(cfg, PRESETS["f32"], 4000)
+    return cfg, np.asarray(ref)
+
+
+class TestHeatClaims:
+    def test_f32_decays(self, heat_ref):
+        cfg, ref = heat_ref
+        assert np.max(np.abs(ref)) < 0.2 * cfg.amplitude  # physics happened
+
+    def test_e5m10_fails(self, heat_ref):
+        """Paper Fig. 1: standard half produces wrong simulation results."""
+        cfg, ref = heat_ref
+        out, _ = simulate_heat(cfg, PRESETS["e5m10"], 4000)
+        err = np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref)
+        assert err > 1.0  # grossly wrong (dynamics frozen by underflow)
+
+    @pytest.mark.parametrize("prec", ["r2f2_16", "r2f2_15"])
+    def test_r2f2_matches_f32(self, heat_ref, prec):
+        """Paper Fig. 7: 16/15-bit R2F2 achieve the f32 result."""
+        cfg, ref = heat_ref
+        out, _ = simulate_heat(cfg, PRESETS[prec], 4000)
+        err = np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref)
+        assert err < 0.05
+
+    def test_exp_init_r2f2_beats_half(self):
+        cfg = HeatConfig(nx=128, init="exp")
+        ref, _ = simulate_heat(cfg, PRESETS["f32"], 4000)
+        half, _ = simulate_heat(cfg, PRESETS["e5m10"], 4000)
+        rr, _ = simulate_heat(cfg, PRESETS["r2f2_16"], 4000)
+        ref = np.asarray(ref)
+        e_half = np.linalg.norm(np.asarray(half) - ref) / np.linalg.norm(ref)
+        e_rr = np.linalg.norm(np.asarray(rr) - ref) / np.linalg.norm(ref)
+        assert e_rr < e_half / 2
+
+    def test_heat_convergence_to_analytic(self):
+        """f32 solver sanity: single sin mode decays as exp(-alpha k^2 t)."""
+        cfg = HeatConfig(nx=256, init="sin", modes=1, amplitude=1.0)
+        steps = 2000
+        out, _ = simulate_heat(cfg, PRESETS["f32"], steps)
+        x = np.linspace(0, cfg.length, cfg.nx)
+        k = np.pi / cfg.length
+        analytic = np.exp(-cfg.alpha * k * k * cfg.dt * steps) * np.sin(k * x)
+        err = np.linalg.norm(np.asarray(out) - analytic) / np.linalg.norm(analytic)
+        assert err < 0.01
+
+
+class TestSWEClaims:
+    @pytest.fixture(scope="class")
+    def swe_ref(self):
+        cfg = SWEConfig()
+        ref, _ = simulate_swe(cfg, PRESETS["f32"], 400)
+        return cfg, np.asarray(ref[0]) - cfg.depth
+
+    def test_e5m10_destroys_simulation(self, swe_ref):
+        """Paper Fig. 8c: E5M10 corrupts the run (h*h overflows 65504)."""
+        cfg, _ = swe_ref
+        out, _ = simulate_swe(cfg, PRESETS["e5m10"], 400)
+        assert not np.isfinite(np.asarray(out)).all()
+
+    @pytest.mark.parametrize("prec", ["r2f2_16", "r2f2_16_384"])
+    def test_r2f2_tracks_f32(self, swe_ref, prec):
+        """Paper Fig. 8b: R2F2 gives the same simulation (field corr)."""
+        cfg, wref = swe_ref
+        out, _ = simulate_swe(cfg, PRESETS[prec], 400)
+        wout = np.asarray(out[0]) - cfg.depth
+        assert np.isfinite(wout).all()
+        corr = np.corrcoef(wout.reshape(-1), wref.reshape(-1))[0, 1]
+        assert corr > 0.98
+
+    def test_mass_conservation_f32(self):
+        cfg = SWEConfig(nx=64, ny=64)
+        U0_total = None
+        from repro.pde.swe2d import initial_state
+
+        U0 = initial_state(cfg)
+        out, _ = simulate_swe(cfg, PRESETS["f32"], 200, U0=U0)
+        m0 = float(np.sum(np.asarray(U0[0])))
+        m1 = float(np.sum(np.asarray(out[0])))
+        assert abs(m1 - m0) / m0 < 5e-3  # reflective walls conserve mass

@@ -1,0 +1,77 @@
+"""Sharding-spec validity for every architecture on small stand-in meshes
+(regression for the MoE duplicate-axis bug; full meshes run in the dry-run)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.train.step import TrainConfig
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) > 1:
+        return jax.make_mesh((1, len(jax.devices())), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _check_no_dup(spec_tree, mesh):
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )[0]:
+        axes = []
+        for entry in spec:
+            if entry is None:
+                continue
+            axes += list(entry) if isinstance(entry, tuple) else [entry]
+        assert len(axes) == len(set(axes)), (path, spec)
+        NamedSharding(mesh, spec)  # must construct
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_valid(arch, mesh):
+    from repro.launch.specs import params_specs
+
+    cfg = get_config(arch)
+    sds, specs = params_specs(cfg, mesh)
+    _check_no_dup(specs, mesh)
+    # every sharded dim must divide the mesh extent (guard behaviour)
+    for (path, spec), (_, leaf) in zip(
+        jax.tree_util.tree_flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0],
+        jax.tree_util.tree_flatten_with_path(sds)[0],
+    ):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            ext = 1
+            for a in entry if isinstance(entry, tuple) else (entry,):
+                ext *= mesh.shape[a]
+            assert dim % ext == 0, (path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "qwen3-moe-235b-a22b", "xlstm-1.3b"])
+def test_state_and_cache_specs_valid(arch, mesh):
+    from repro.launch.specs import decode_specs, state_specs
+
+    cfg = get_config(arch)
+    _, specs = state_specs(cfg, TrainConfig(), mesh)
+    _check_no_dup(specs, mesh)
+
+    (p_sds, c_sds, t_sds, pos_sds), shardings = decode_specs(cfg, SHAPES["decode_32k"], mesh)
+    # NamedShardings constructed without error is the assertion
+    assert shardings is not None
+
+
+def test_logical_rules_resolve():
+    from repro.dist.sharding import DEFAULT_RULES, logical_spec
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for name in DEFAULT_RULES:
+        logical_spec(name, mesh=mesh)  # must not raise
+    with pytest.raises(KeyError):
+        logical_spec("not-an-axis", mesh=mesh)

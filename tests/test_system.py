@@ -1,0 +1,62 @@
+"""End-to-end system behaviour: train -> checkpoint -> serve; PDE apps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.policy import PRESETS
+from repro.data import batch_for_step
+from repro.serve import generate
+from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step
+
+
+def test_train_then_serve_end_to_end(tmp_path):
+    """Train a tiny LM until loss visibly drops, checkpoint it, reload and
+    serve batched greedy generation."""
+    from repro.ckpt import restore, save
+
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    tcfg = TrainConfig(opt=OptConfig(lr=2e-3, warmup_steps=5, total_steps=60))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    fn = jax.jit(make_train_step(cfg, PRESETS["deploy"], tcfg))
+    first = None
+    for i in range(40):
+        state, m = fn(state, batch_for_step(cfg, i, 8, 64))
+        first = first if first is not None else float(m["loss"])
+    last = float(m["loss"])
+    assert last < first * 0.8, (first, last)
+
+    save(state, str(tmp_path), 40)
+    state2 = restore(state, str(tmp_path), 40)
+
+    prompts = batch_for_step(cfg, 99, 4, 16)["tokens"]
+    toks = generate(state2["params"], cfg, PRESETS["deploy"], prompts, max_new_tokens=8)
+    assert toks.shape == (4, 8)
+    assert bool((toks >= 0).all()) and bool((toks < cfg.vocab).all())
+
+
+def test_pde_applications_run():
+    from repro.pde import HeatConfig, SWEConfig, simulate_heat, simulate_swe
+
+    u, _ = simulate_heat(HeatConfig(nx=64), PRESETS["r2f2_16"], 100)
+    assert bool(jnp.isfinite(u).all())
+    U, _ = simulate_swe(SWEConfig(nx=32, ny=32), PRESETS["r2f2_16"], 20)
+    assert bool(jnp.isfinite(U).all())
+
+
+def test_rr_precision_is_first_class_everywhere():
+    """The same PrecisionConfig drives models, PDE solvers, and kernels."""
+    from repro.core.policy import PRESETS, PrecisionConfig
+    from repro.kernels import ops
+    from repro.models import lm_loss, model_init
+
+    prec = PRESETS["r2f2_16"]
+    cfg = reduced(get_config("yi-34b"))
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    b = batch_for_step(cfg, 0, 2, 16)
+    assert bool(jnp.isfinite(lm_loss(params, b, cfg, prec)))
+
+    x = np.random.default_rng(0).normal(size=(256, 256)).astype(np.float32)
+    y, k = ops.r2f2_quantize(x, prec.fmt)
+    assert bool(jnp.isfinite(y).all())
