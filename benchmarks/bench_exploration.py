@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quantize_em
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.pde import HeatConfig, simulate_heat
 
 # 16-bit configs swept in Fig. 3 (e + m = 15 plus sign)

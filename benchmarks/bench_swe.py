@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import FlexFormat, r2f2_mul_sequential
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.pde import SWEConfig, simulate_swe
 
 PRECS = ["e5m10", "r2f2_16", "r2f2_16_384", "bf16"]

@@ -1,46 +1,112 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,kernels,roofline]
+                                            [--json-dir artifacts/bench]
 
-Prints ``name,us_per_call,derived`` CSV lines per bench.
+Most benches print ``name,us_per_call,derived`` CSV lines; the harness
+captures them and emits one machine-readable ``BENCH_<suite>.json`` per
+suite so the perf trajectory accumulates across commits (CI keeps these as
+artifacts). Suites with non-CSV output (e.g. roofline's table) are kept as
+raw text lines instead of parsed rows. JSON schema:
+
+    {"suite": str, "unix_time": float, "backend": str,
+     "rows": [{"name": str, "us_per_call": float, "derived": str}],
+     "raw_lines": [str]}   # only when no CSV rows were found
 """
 
 import argparse
-import sys
+import contextlib
+import io
+import json
+import os
+import time
+
+SUITES = ("mul", "exploration", "heat", "swe", "kernels", "roofline")
+
+
+def _run_suite(name: str) -> str:
+    """Import lazily and run one suite, returning its captured stdout."""
+    if name == "mul":
+        from benchmarks import bench_mul_accuracy as mod
+    elif name == "exploration":
+        from benchmarks import bench_exploration as mod
+    elif name == "heat":
+        from benchmarks import bench_heat as mod
+    elif name == "swe":
+        from benchmarks import bench_swe as mod
+    elif name == "kernels":
+        from benchmarks import bench_kernels as mod
+    elif name == "roofline":
+        from benchmarks import roofline as mod
+    else:
+        raise ValueError(f"unknown suite {name!r}")
+
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            mod.main()
+    except BaseException:
+        # surface whatever the suite printed before dying, then the traceback
+        print(buf.getvalue(), end="")
+        raise
+    return buf.getvalue()
+
+
+def _parse_rows(text: str):
+    """``name,us_per_call,derived`` CSV lines -> row dicts (others ignored)."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or "/" not in parts[0]:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append(
+            {
+                "name": parts[0],
+                "us_per_call": us,
+                "derived": parts[2] if len(parts) > 2 else "",
+            }
+        )
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument(
+        "--json-dir",
+        default=".",
+        help="directory for BENCH_<suite>.json files (created if missing)",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.json_dir, exist_ok=True)
 
-    def want(name):
-        return only is None or name in only
+    import jax
 
-    if want("mul"):
-        from benchmarks import bench_mul_accuracy
-        bench_mul_accuracy.main()
+    for suite in SUITES:
+        if only is not None and suite not in only:
+            continue
+        text = _run_suite(suite)
+        print(text, end="")
         print()
-    if want("exploration"):
-        from benchmarks import bench_exploration
-        bench_exploration.main()
-        print()
-    if want("heat"):
-        from benchmarks import bench_heat
-        bench_heat.main()
-        print()
-    if want("swe"):
-        from benchmarks import bench_swe
-        bench_swe.main()
-        print()
-    if want("kernels"):
-        from benchmarks import bench_kernels
-        bench_kernels.main()
-        print()
-    if want("roofline"):
-        from benchmarks import roofline
-        roofline.main()
+        record = {
+            "suite": suite,
+            "unix_time": time.time(),
+            "backend": jax.default_backend(),
+            "rows": _parse_rows(text),
+        }
+        if not record["rows"]:  # non-CSV suite: keep the output verbatim
+            record["raw_lines"] = [l for l in text.splitlines() if l.strip()]
+        path = os.path.join(args.json_dir, f"BENCH_{suite}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        n = len(record["rows"]) or len(record.get("raw_lines", []))
+        kind = "rows" if record["rows"] else "raw lines"
+        print(f"[bench] wrote {path} ({n} {kind})")
 
 
 if __name__ == "__main__":

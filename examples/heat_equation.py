@@ -7,7 +7,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.pde import HeatConfig, simulate_heat
 
 

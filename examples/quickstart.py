@@ -5,7 +5,8 @@
 
 import numpy as np
 
-from repro.core import FlexFormat, PRESETS, quantize_em, r2f2_mul_sequential, r2f2_multiply
+from repro.core import FlexFormat, quantize_em, r2f2_mul_sequential, r2f2_multiply
+from repro.precision import PRESETS, get_engine
 
 fmt = FlexFormat(3, 9, 3)  # the paper's 16-bit <EB=3, MB=9, FX=3>
 
@@ -40,7 +41,13 @@ prods, st = r2f2_mul_sequential(drift, drift, fmt)
 print(f"  stream drifting 3e4 -> 1e-6: {int(st.overflow_adjusts)} overflow adjusts, "
       f"{int(st.redundancy_adjusts)} redundancy adjusts (paper §5.3 behaviour)")
 
-print("\n=== 4. drop-in precision policy for a whole simulation ===")
+print("\n=== 4. one pluggable engine per policy mode ===")
+for name in ("f32", "e5m10", "r2f2_16", "deploy"):
+    eng = get_engine(PRESETS[name])
+    print(f"  PRESETS[{name!r}] -> engine {eng.name!r} "
+          f"(emulated={eng.emulated}, operand dtype={eng.operand_dtype(PRESETS[name]).__name__})")
+
+print("\n=== 5. drop-in precision policy for a whole simulation ===")
 from repro.pde import HeatConfig, simulate_heat
 cfg = HeatConfig(nx=128)
 ref, _ = simulate_heat(cfg, PRESETS["f32"], 2000)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ckpt import latest_step, restore
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.data import batch_for_step
 from repro.models import model_init
 from repro.serve import generate

@@ -10,7 +10,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.pde import SWEConfig, simulate_swe
 
 

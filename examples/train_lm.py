@@ -13,7 +13,7 @@ import time
 import jax
 
 from repro.ckpt import latest_step, restore, save
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.data import batch_for_step
 from repro.models.config import ModelConfig
 from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step

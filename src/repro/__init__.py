@@ -4,8 +4,10 @@ Paper: "Exploring and Exploiting Runtime Reconfigurable Floating Point
 Precision in Scientific Computing: a Case Study for Solving PDEs" (2024).
 
 Subpackages:
-  core     — the paper's contribution: flexible formats, R2F2 multiplier,
-             precision policy, rr-precision dot/einsum
+  core      — flexible formats, R2F2 multiplier, PrecisionConfig/RangeTracker
+  precision — THE precision surface: PrecisionEngine registry, named-site
+              SiteTracker, contract/dot/multiply/divide/store functional API
+              (core.rr_dot and pde.precision_ops are shims over it)
   kernels  — Pallas TPU kernels (+ jnp oracles)
   pde      — heat1d / swe2d case studies
   models   — 10-architecture LM zoo (dense/MoE/SSM/xLSTM/hybrid/encoder/VLM)

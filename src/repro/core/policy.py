@@ -32,6 +32,7 @@ from .r2f2 import _needed_e_bits, _needed_e_bits_lo, _tile_max_exp, select_k  # 
 
 __all__ = [
     "PrecisionConfig",
+    "KNOWN_MODES",
     "RangeTracker",
     "tracker_init",
     "tracker_update",
@@ -39,19 +40,29 @@ __all__ = [
     "PRESETS",
 ]
 
+# Modes a PrecisionConfig may carry. The six builtins are listed statically;
+# repro.precision.register_engine() extends this set at registration time, so
+# third-party engines (fp8, stochastic rounding, ...) become valid modes
+# without touching this module.
+KNOWN_MODES = {"f32", "bf16", "fixed", "rr_tile", "rr_tracked", "deploy"}
+
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionConfig:
     """Static (hashable — safe as a jit static arg) precision policy.
 
-    mode:
+    mode (each is a registered repro.precision engine):
       "f32"        — reference arithmetic
       "bf16"       — plain mixed precision baseline
       "fixed"      — fixed E(e)M(m) emulation (e.g. E5M10: the paper's
                      failing baseline), ``fixed_em`` below
       "rr_tile"    — R2F2 emulation, per-tile runtime k selection
-      "rr_tracked" — R2F2 emulation, k from a RangeTracker site
+      "rr_tracked" — R2F2 emulation, k from a (Site)Tracker site
       "deploy"     — bf16 arithmetic + tracker-driven k bookkeeping
+
+    use_kernels: let rr engines dispatch eligible 2-D contractions to the
+    Pallas ``r2f2_matmul`` fast path (forward-only; see DESIGN.md §7). The
+    policy — not the call site — picks the fast path.
     """
 
     mode: str = "deploy"
@@ -61,14 +72,20 @@ class PrecisionConfig:
     tail_approx: bool = True  # paper's flexible-region product approximation
     ema: float = 0.95  # RangeTracker decay
     headroom: int = 1  # extra exponent slack (in powers of 2) for tracked mode
+    use_kernels: bool = False  # Pallas fast path for eligible contractions
 
     def __post_init__(self):
-        if self.mode not in ("f32", "bf16", "fixed", "rr_tile", "rr_tracked", "deploy"):
-            raise ValueError(f"unknown precision mode {self.mode!r}")
+        if self.mode not in KNOWN_MODES:
+            raise ValueError(
+                f"unknown precision mode {self.mode!r}; known: {sorted(KNOWN_MODES)} "
+                "(register new modes via repro.precision.register_engine)"
+            )
 
     @property
     def is_emulated(self) -> bool:
-        return self.mode in ("fixed", "rr_tile", "rr_tracked")
+        from repro.precision.registry import get_engine  # lazy: no import cycle
+
+        return get_engine(self).emulated
 
 
 PRESETS = {

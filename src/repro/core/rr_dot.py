@@ -1,81 +1,34 @@
-"""rr-precision matmul/einsum wrappers — the single integration point
-between the paper's numeric substrate and every model in the framework.
+"""Backward-compatible shims over the ``repro.precision`` engine API.
 
-All dense compute in ``repro.models`` and the PDE solvers routes through
-:func:`rr_einsum` / :func:`rr_dot`. The :class:`PrecisionConfig` decides what
-actually happens to the operands (see policy.py). Quantization is
-elementwise, so operand preparation composes with any contraction; the
-product itself accumulates in f32 (``preferred_element_type``), matching both
-the paper's multiplier (whose result register is wider than the operands) and
-MXU semantics (bf16 operands, f32 accumulate).
+Historically this module *was* the integration point between the paper's
+numeric substrate and every model: it held the per-mode dispatch chains for
+operand prep and contractions. That logic now lives in
+``repro.precision.engines`` (one engine per mode, registry-dispatched —
+DESIGN.md §4); these wrappers exist so the original call-site surface keeps
+working unchanged:
 
-Same-format constraint: the paper requires both operands of one multiply to
-share a format. ``rr_einsum(shared_k=True)`` enforces one k per contraction
-(the max of both operands' needs — what the sequential hardware converges
-to); ``shared_k=False`` lets each operand tile carry its own split, which is
-the natural generalisation on a machine with per-tile metadata (noted as a
-deliberate extension in DESIGN.md §8; the Pallas matmul kernel implements the
-faithful per-block-pair shared k).
+    rr_operand(x, cfg)            == repro.precision.prepare_operand(x, cfg)
+    rr_einsum(spec, a, b, cfg)    == repro.precision.contract(spec, a, b, cfg)
+    rr_dot(x, w, cfg)             == repro.precision.dot(x, w, cfg)
+
+Return contract (now uniform across modes, fixing the historical
+inconsistency): ``rr_einsum``/``rr_dot`` return ``out`` when no tracker is
+passed and ``(out, tracker)`` whenever one is — for every mode. ``site``
+accepts the legacy integer index or a named site string when ``tracker`` is
+a :class:`repro.precision.SiteTracker`.
+
+Imports are function-local: ``repro.core`` must stay importable without
+pulling the engine package (which imports back into core).
 """
 
 from __future__ import annotations
 
-import os
-from typing import Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from .flexformat import quantize_em_with_flags
-from .policy import PrecisionConfig, RangeTracker, tracker_k, tracker_update
-from .r2f2 import _tile_max_exp, select_k, select_k_operand
+from typing import Optional
 
 __all__ = ["rr_operand", "rr_einsum", "rr_dot"]
 
 
-def _native_bf16() -> bool:
-    """Keep operands in native bf16 inside contractions?
-
-    True on TPU (MXU semantics) and for compile-only dry-runs
-    (REPRO_NATIVE_BF16=1 — accurate HLO byte accounting). False on CPU
-    execution paths: XLA:CPU cannot execute batched bf16xbf16->f32 dots, and
-    casting the rounded operands back to f32 is value-identical to an MXU's
-    exact-product/f32-accumulate anyway.
-    """
-    env = os.environ.get("REPRO_NATIVE_BF16")
-    if env is not None:
-        return env == "1"
-    return jax.default_backend() == "tpu"
-
-
-def _bf16_pair(a, b):
-    a = a.astype(jnp.bfloat16)
-    b = b.astype(jnp.bfloat16)
-    if not _native_bf16():
-        a = a.astype(jnp.float32)
-        b = b.astype(jnp.float32)
-    return a, b
-
-
-def _tile_shape_for(x, tile: int) -> Optional[Tuple[int, ...]]:
-    """Tiles of ``tile`` on the last two dims (1 elsewhere) when divisible;
-    per-tensor fallback otherwise."""
-    if x.ndim == 0:
-        return None
-    shape = [1] * x.ndim
-    for ax in range(max(0, x.ndim - 2), x.ndim):
-        shape[ax] = tile if x.shape[ax] % tile == 0 else x.shape[ax]
-    return tuple(shape)
-
-
-def _ste(x, xq):
-    """Straight-through estimator: bit-exact quantized forward, identity
-    backward — the emulation's integer ops are non-differentiable, and STE
-    is the standard QAT contract for training through quantizers."""
-    return x + jax.lax.stop_gradient(xq - x)
-
-
-def rr_operand(x, cfg: PrecisionConfig, *, k=None):
+def rr_operand(x, cfg, *, k=None):
     """Quantize one operand according to the policy. Returns (x_q, k_tile).
 
     For "rr_tile" with ``k=None`` the split is selected per tile from the
@@ -83,50 +36,19 @@ def rr_operand(x, cfg: PrecisionConfig, *, k=None):
     tracker or a shared-k contraction) overrides selection. Emulated modes
     are differentiable via STE.
     """
-    x = jnp.asarray(x, jnp.float32)
-    fmt = cfg.fmt
-    if cfg.mode == "f32":
-        return x, None
-    if cfg.mode in ("bf16", "deploy"):
-        return x.astype(jnp.bfloat16).astype(jnp.float32), None
-    if cfg.mode == "fixed":
-        e, m = cfg.fixed_em
-        return _ste(x, quantize_em_with_flags(x, e, m)[0]), None
+    from repro.precision import prepare_operand
 
-    # rr_tile / rr_tracked emulation
-    if k is None:
-        me, bcast = _tile_max_exp(x, _tile_shape_for(x, cfg.tile))
-        k = select_k_operand(me, fmt)  # operand-range-only need
-        k_full = bcast(k)
-    else:
-        k = jnp.asarray(k, jnp.int32)
-        if k.ndim == 0:
-            k_full = k
-        else:
-            _, bcast = _tile_max_exp(x, _tile_shape_for(x, cfg.tile))
-            k_full = bcast(k)
-    e_bits = fmt.eb + k_full
-    m_bits = fmt.mb + fmt.fx - k_full
-    xq, _, _ = quantize_em_with_flags(x, e_bits, m_bits)
-    return _ste(x, xq), k
-
-
-def _shared_k(a, b, cfg: PrecisionConfig):
-    """One split per contraction: max need across both whole operands plus
-    the product bound (paper's same-format rule)."""
-    ae, _ = _tile_max_exp(a, None)
-    be, _ = _tile_max_exp(b, None)
-    return select_k(ae, be, cfg.fmt)
+    return prepare_operand(x, cfg, k=k)
 
 
 def rr_einsum(
     spec: str,
     a,
     b,
-    cfg: PrecisionConfig,
+    cfg,
     *,
-    tracker: Optional[RangeTracker] = None,
-    site: Optional[int] = None,
+    tracker=None,
+    site=None,
     shared_k: bool = False,
 ):
     """Einsum with rr-precision operand treatment.
@@ -134,50 +56,13 @@ def rr_einsum(
     Returns ``out`` (and the updated tracker when one is passed:
     ``(out, tracker)``). f32 accumulation always.
     """
-    a = jnp.asarray(a)
-    b = jnp.asarray(b)
+    from repro.precision import contract
 
-    if cfg.mode == "f32":
-        out = jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
-        return (out, tracker) if tracker is not None else out
-
-    if cfg.mode in ("bf16", "deploy"):
-        aq, bq = _bf16_pair(a, b)
-        out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
-        if tracker is not None and cfg.mode == "deploy" and site is not None:
-            tracker = tracker_update(tracker, site, a, b, cfg)
-            return out, tracker
-        return (out, tracker) if tracker is not None else out
-
-    if cfg.mode == "fixed":
-        e, m = cfg.fixed_em
-        af = a.astype(jnp.float32)
-        bf = b.astype(jnp.float32)
-        aq = _ste(af, quantize_em_with_flags(af, e, m)[0])
-        bq = _ste(bf, quantize_em_with_flags(bf, e, m)[0])
-        out = jnp.einsum(spec, aq, bq)
-        return (out, tracker) if tracker is not None else out
-
-    # --- emulated rr modes ---
-    k = None
-    if cfg.mode == "rr_tracked":
-        if tracker is None or site is None:
-            raise ValueError("rr_tracked needs tracker+site")
-        k = tracker_k(tracker, site)
-        tracker = tracker_update(tracker, site, a, b, cfg)
-    elif shared_k:
-        k = _shared_k(a.astype(jnp.float32), b.astype(jnp.float32), cfg)
-
-    aq, _ = rr_operand(a, cfg, k=k)
-    bq, _ = rr_operand(b, cfg, k=k)
-    out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
-    return (out, tracker) if tracker is not None else out
+    return contract(spec, a, b, cfg, tracker=tracker, site=site, shared_k=shared_k)
 
 
-def rr_dot(x, w, cfg: PrecisionConfig, **kw):
+def rr_dot(x, w, cfg, **kw):
     """Dense-layer contraction: last dim of ``x`` against first of ``w``."""
-    n = x.ndim
-    lhs = "".join(chr(ord("a") + i) for i in range(n - 1)) + "z"
-    rhs_extra = "".join(chr(ord("m") + i) for i in range(w.ndim - 1))
-    spec = f"{lhs},z{rhs_extra}->{lhs[:-1]}{rhs_extra}"
-    return rr_einsum(spec, x, w, cfg, **kw)
+    from repro.precision import dot
+
+    return dot(x, w, cfg, **kw)

@@ -1,0 +1,5 @@
+"""repro.dist — logical-axis sharding for models and launchers."""
+
+from .sharding import DEFAULT_RULES, axis_rules, constrain, logical_spec
+
+__all__ = ["DEFAULT_RULES", "axis_rules", "constrain", "logical_spec"]

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, applicability, cell_window, get_config
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.launch.hlo_cost import parse_hlo_costs
 from repro.dist.sharding import axis_rules
 from repro.launch.mesh import make_production_mesh

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.ckpt import latest_step, restore, save
 from repro.configs import get_config, reduced
-from repro.core.policy import PRESETS
+from repro.precision import PRESETS
 from repro.data import batch_for_step
 from repro.dist.sharding import axis_rules
 from repro.launch.mesh import make_host_mesh

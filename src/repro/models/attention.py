@@ -18,9 +18,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_dot, rr_einsum
 from repro.dist.sharding import constrain
+from repro.precision import PrecisionConfig, contract, dot
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rope
 
@@ -49,9 +48,9 @@ def _qkv(p, x, cfg: ModelConfig, positions, prec: PrecisionConfig):
     """Returns q: (B,S,H,hd) flat heads; k, v: (B,S,KV,hd)."""
     B, S, _ = x.shape
     kv, hd = cfg.n_kv_heads, cfg.hd
-    q = rr_dot(x, p["wq"], prec).reshape(B, S, cfg.n_heads, hd)
-    k = rr_dot(x, p["wk"], prec).reshape(B, S, kv, hd)
-    v = rr_dot(x, p["wv"], prec).reshape(B, S, kv, hd)
+    q = dot(x, p["wq"], prec, site="attn.q").reshape(B, S, cfg.n_heads, hd)
+    k = dot(x, p["wk"], prec, site="attn.k").reshape(B, S, kv, hd)
+    v = dot(x, p["wv"], prec, site="attn.v").reshape(B, S, kv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     return q, k, v
@@ -75,7 +74,7 @@ def _dense_attention(q, k, v, causal, window, prec):
     q = constrain(q, "batch", None, "heads", None)
     k = constrain(k, "batch", None, "heads", None)
     v = constrain(v, "batch", None, "heads", None)
-    logits = rr_einsum("bshd,bthd->bhst", q, k, prec)  # (B,H,S,T)
+    logits = contract("bshd,bthd->bhst", q, k, prec, site="attn.qk")  # (B,H,S,T)
     logits = constrain(logits, "batch", "heads", None, None)
     ti = jnp.arange(S)[None, :]
     si = jnp.arange(S)[:, None]
@@ -84,7 +83,7 @@ def _dense_attention(q, k, v, causal, window, prec):
         mask = mask & (ti > si - window)
     logits = jnp.where(mask[None, None], logits, _NEG)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    out = rr_einsum("bhst,bthd->bshd", probs, v, prec)
+    out = contract("bhst,bthd->bshd", probs, v, prec, site="attn.pv")
     return constrain(out, "batch", None, "heads", None)
 
 
@@ -115,7 +114,7 @@ def _chunked_attention(q, k, v, causal, window, prec, cq=FLASH_CHUNK, ck=FLASH_C
         def k_body(carry, kj_blk):
             m, l, acc = carry
             kj, kblk, vblk = kj_blk
-            logit = rr_einsum("bshd,bthd->bhst", qblk, kblk, prec)  # (B,H,cq,ck)
+            logit = contract("bshd,bthd->bhst", qblk, kblk, prec, site="attn.qk")  # (B,H,cq,ck)
             logit = constrain(logit, "batch", "heads", None, None)
             qp = qi * cq + qpos_base[:, None]
             kp = kj * ck + kpos_base[None, :]
@@ -127,7 +126,7 @@ def _chunked_attention(q, k, v, causal, window, prec, cq=FLASH_CHUNK, ck=FLASH_C
             corr = jnp.exp(m - m_new)
             p = jnp.exp(logit - m_new[..., None])
             l_new = l * corr + jnp.sum(p, axis=-1)
-            pv = rr_einsum("bhst,bthd->bshd", p, vblk, prec)  # (B,cq,H,hd)
+            pv = contract("bhst,bthd->bshd", p, vblk, prec, site="attn.pv")  # (B,cq,H,hd)
             acc_new = acc * jnp.moveaxis(corr, 2, 1)[..., None] + pv
             return (m_new, l_new, acc_new), None
 
@@ -158,7 +157,7 @@ def attn_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, positions=None, wi
         out = _chunked_attention(qf, kf, vf, cfg.causal, window, prec)
     out = out.reshape(B, S, cfg.n_heads * cfg.hd)
     out = constrain(out, "batch", "seq", "heads")
-    return rr_dot(out, p["wo"], prec), KVCache(k=k, v=v)
+    return dot(out, p["wo"], prec, site="attn.o"), KVCache(k=k, v=v)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
@@ -187,13 +186,13 @@ def attn_decode(p, x, cache: KVCache, pos, cfg: ModelConfig, prec: PrecisionConf
     # inserts the distributed max/sum for the softmax over the sharded T.
     kf = _expand_kv(k_cache.astype(jnp.float32), g)
     vf = _expand_kv(v_cache.astype(jnp.float32), g)
-    logits = rr_einsum("bshd,bthd->bhst", q * (hd ** -0.5), kf, prec)  # (B,H,1,T)
+    logits = contract("bshd,bthd->bhst", q * (hd ** -0.5), kf, prec, site="attn.qk")  # (B,H,1,T)
     t = jnp.arange(cache.k.shape[1])
     valid = t <= pos
     if window is not None:
         valid = valid & (t > pos - window)
     logits = jnp.where(valid[None, None, None, :], logits, _NEG)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    out = rr_einsum("bhst,bthd->bshd", probs, vf, prec)
+    out = contract("bhst,bthd->bshd", probs, vf, prec, site="attn.pv")
     out = out.reshape(B, 1, cfg.n_heads * hd)
-    return rr_dot(out, p["wo"], prec), KVCache(k=k_cache, v=v_cache)
+    return dot(out, p["wo"], prec, site="attn.o"), KVCache(k=k_cache, v=v_cache)

@@ -1,7 +1,7 @@
 """Shared neural-net layers (pure functional JAX; params = nested dicts).
 
-Every matmul routes through ``repro.core.rr_dot`` so the paper's
-rr-precision policy applies uniformly (DESIGN.md §4). Initializers take an
+Every matmul routes through the ``repro.precision`` engine API so the
+paper's rr-precision policy applies uniformly (DESIGN.md §4). Initializers take an
 explicit PRNG key; dtypes are f32 at rest (the precision policy decides the
 compute representation).
 """
@@ -14,9 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_dot, rr_einsum
 from repro.dist.sharding import constrain
+from repro.precision import PrecisionConfig, dot
 
 __all__ = [
     "dense_init",
@@ -65,11 +64,11 @@ def mlp_init(key, d: int, d_ff: int, act: str):
 
 def mlp_apply(p, x, act: str, prec: PrecisionConfig):
     if act == "swiglu":
-        h = silu(rr_dot(x, p["gate"], prec)) * rr_dot(x, p["up"], prec)
+        h = silu(dot(x, p["gate"], prec, site="mlp.gate")) * dot(x, p["up"], prec, site="mlp.up")
     else:
-        h = jax.nn.gelu(rr_dot(x, p["up"], prec))
+        h = jax.nn.gelu(dot(x, p["up"], prec, site="mlp.up"))
     h = constrain(h, "batch", "seq", "mlp")
-    return rr_dot(h, p["down"], prec)
+    return dot(h, p["down"], prec, site="mlp.down")
 
 
 def rope(x, positions, theta: float):

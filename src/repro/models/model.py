@@ -20,9 +20,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_dot
 from repro.dist.sharding import constrain
+from repro.precision import PrecisionConfig, dot
 from repro.models import attention, moe, ssm, xlstm
 from repro.models.config import ModelConfig, parse_entry
 from repro.models.layers import embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
@@ -143,7 +142,7 @@ def _embed_inputs(params, cfg: ModelConfig, tokens=None, embeds=None, prec=None)
     parts = []
     if embeds is not None:
         parts.append(
-            rr_dot(embeds.astype(jnp.float32), params["frontend_proj"], prec)
+            dot(embeds.astype(jnp.float32), params["frontend_proj"], prec, site="lm.frontend")
         )
     if tokens is not None:
         parts.append(params["embed"][tokens])
@@ -186,7 +185,7 @@ def forward(
     x = x.astype(jnp.float32)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = rr_dot(x, head, prec)
+    logits = dot(x, head, prec, site="lm.head")
     logits = constrain(logits, "batch", "seq", "vocab")
     return logits, jnp.sum(auxs)
 
@@ -233,7 +232,7 @@ def decode_step(
     x, new_caches = jax.lax.scan(group_fn, x, (params["blocks"], caches))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = rr_dot(x, head, prec)
+    logits = dot(x, head, prec, site="lm.head")
     return constrain(logits, "batch", None, "vocab"), new_caches
 
 
@@ -263,7 +262,7 @@ def prefill(params, cfg, prec, tokens=None, embeds=None, max_len=None, window=No
     x, (auxs, caches) = jax.lax.scan(group_fn, x, params["blocks"])
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = rr_dot(x, head, prec)
+    logits = dot(x, head, prec, site="lm.head")
     return constrain(logits, "batch", "seq", "vocab"), caches
 
 

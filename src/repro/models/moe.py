@@ -19,9 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_einsum
 from repro.dist.sharding import constrain
+from repro.precision import PrecisionConfig, contract, operand_dtype
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, silu
 
@@ -61,7 +60,7 @@ def moe_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig):
     n = B * S
     xt = x.reshape(n, d)
 
-    logits = rr_einsum("nd,de->ne", xt, p["router"], prec)
+    logits = contract("nd,de->ne", xt, p["router"], prec, site="moe.router")
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
 
     gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (n, k)
@@ -86,20 +85,20 @@ def moe_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig):
         comb = jnp.einsum(
             "nk,nke,nkc->nec", gate_vals.astype(xt.dtype), onehot.astype(xt.dtype), pos_oh
         )
-        xe = rr_einsum("nec,nd->ecd", disp, xt, prec)
+        xe = contract("nec,nd->ecd", disp, xt, prec, site="moe.dispatch")
         xe = constrain(xe, "experts", None, "embed")
-        h = silu(rr_einsum("ecd,edf->ecf", xe, p["gate"], prec)) * rr_einsum(
-            "ecd,edf->ecf", xe, p["up"], prec
+        h = silu(contract("ecd,edf->ecf", xe, p["gate"], prec, site="moe.gate")) * contract(
+            "ecd,edf->ecf", xe, p["up"], prec, site="moe.up"
         )
         h = constrain(h, "experts", None, None)
-        ye = rr_einsum("ecf,efd->ecd", h, p["down"], prec)
-        out = rr_einsum("nec,ecd->nd", comb, ye, prec).reshape(B, S, d)
+        ye = contract("ecf,efd->ecd", h, p["down"], prec, site="moe.down")
+        out = contract("nec,ecd->nd", comb, ye, prec, site="moe.combine").reshape(B, S, d)
     else:
         # scatter dispatch: O(n*k*d) flops; the SPMD-lowered scatter/gather
         # all-reduces are ~the all-to-all dispatch lower bound (every token
         # may route anywhere). Payloads move in the policy's operand width
         # (bf16 under deploy/bf16 — halves ICI/DCI bytes; f32 for exact runs).
-        payload = jnp.bfloat16 if prec.mode in ("bf16", "deploy") else jnp.float32
+        payload = operand_dtype(prec)
         flat_e = expert_idx.reshape(-1)
         flat_pos = jnp.where(keep, pos, capacity).reshape(-1)  # slot `capacity` = drop
         xb = xt.astype(payload)
@@ -110,11 +109,11 @@ def moe_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig):
             .add(x_rep)[:, :capacity]
         ).astype(jnp.float32)
         xe = constrain(xe, "experts", None, "embed")
-        h = silu(rr_einsum("ecd,edf->ecf", xe, p["gate"], prec)) * rr_einsum(
-            "ecd,edf->ecf", xe, p["up"], prec
+        h = silu(contract("ecd,edf->ecf", xe, p["gate"], prec, site="moe.gate")) * contract(
+            "ecd,edf->ecf", xe, p["up"], prec, site="moe.up"
         )
         h = constrain(h, "experts", None, None)
-        ye = rr_einsum("ecf,efd->ecd", h, p["down"], prec)
+        ye = contract("ecf,efd->ecd", h, p["down"], prec, site="moe.down")
         yb = ye.astype(payload)
         yk = yb[flat_e, jnp.minimum(flat_pos, capacity - 1)]  # (n*k, d) payload moves
         yk = jnp.where(keep.reshape(-1, 1), yk, payload(0)).reshape(n, k, d)
@@ -125,10 +124,10 @@ def moe_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig):
 
     if cfg.moe_shared_expert:
         sp = p["shared"]
-        hs = silu(rr_einsum("nd,df->nf", xt, sp["gate"], prec)) * rr_einsum(
-            "nd,df->nf", xt, sp["up"], prec
+        hs = silu(contract("nd,df->nf", xt, sp["gate"], prec, site="moe.shared.gate")) * contract(
+            "nd,df->nf", xt, sp["up"], prec, site="moe.shared.up"
         )
-        out = out + rr_einsum("nf,fd->nd", hs, sp["down"], prec).reshape(B, S, d)
+        out = out + contract("nf,fd->nd", hs, sp["down"], prec, site="moe.shared.down").reshape(B, S, d)
 
     # load-balancing aux loss (Switch): e * sum_e(fraction_tokens * mean_prob)
     frac = jnp.mean(onehot[:, 0, :].astype(jnp.float32), axis=0)  # top-1 assignment share

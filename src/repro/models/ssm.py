@@ -18,8 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_dot, rr_einsum
+from repro.precision import PrecisionConfig, dot
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, silu
 
@@ -53,8 +52,8 @@ def mamba_init(key, cfg: ModelConfig):
 def _ssm_inputs(p, x, cfg: ModelConfig, prec):
     """Projections shared by train and decode: returns (xz-split, dt, Bc, Cc)."""
     r, s = cfg.dt_rank_, cfg.ssm_state
-    xbc = rr_dot(x, p["x_proj"], prec)  # (..., r + 2s)
-    dt = jax.nn.softplus(rr_dot(xbc[..., :r], p["dt_proj"], prec) + p["dt_bias"])
+    xbc = dot(x, p["x_proj"], prec, site="ssm.x_proj")  # (..., r + 2s)
+    dt = jax.nn.softplus(dot(xbc[..., :r], p["dt_proj"], prec, site="ssm.dt_proj") + p["dt_bias"])
     Bc = xbc[..., r : r + s]
     Cc = xbc[..., r + s :]
     return dt, Bc, Cc
@@ -117,7 +116,7 @@ def mamba_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     """Full-sequence mixer. x: (B, S, d). Returns (out, MambaState)."""
     B, S, d = x.shape
     di = cfg.d_inner
-    xz = rr_dot(x, p["in_proj"], prec)
+    xz = dot(x, p["in_proj"], prec, site="ssm.in_proj")
     xi, z = xz[..., :di], xz[..., di:]
     conv_state = None if state is None else state.conv
     xi, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
@@ -131,7 +130,7 @@ def mamba_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     y, h_fin = _selective_scan_chunked(xi, dt, Bc, Cc, A, h0)
     y = y + xi * p["D"]
     y = y * silu(z)
-    out = rr_dot(y, p["out_proj"], prec)
+    out = dot(y, p["out_proj"], prec, site="ssm.out_proj")
     return out, MambaState(h=h_fin, conv=new_conv)
 
 

@@ -20,8 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-from repro.core.rr_dot import rr_dot, rr_einsum
+from repro.precision import PrecisionConfig, contract, dot
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, silu
 
@@ -83,7 +82,7 @@ def _blockdiag_proj(x, w, prec):
     B, S, li = x.shape
     nb, bs, _ = w.shape
     xb = x.reshape(B, S, nb, bs)
-    out = rr_einsum("bsng,ngh->bsnh", xb, w, prec)
+    out = contract("bsng,ngh->bsnh", xb, w, prec, site="xlstm.qkv")
     return out.reshape(B, S, li)
 
 
@@ -145,13 +144,13 @@ def mlstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     B, S, d = x.shape
     H, li = cfg.n_heads, cfg.lstm_inner
     dh = li // H
-    xi = silu(rr_dot(x, p["up_x"], prec))
-    z = rr_dot(x, p["up_z"], prec)
+    xi = silu(dot(x, p["up_x"], prec, site="xlstm.up_x"))
+    z = dot(x, p["up_z"], prec, site="xlstm.up_z")
 
     q = _blockdiag_proj(xi, p["wq"], prec).reshape(B, S, H, dh)
     k = _blockdiag_proj(xi, p["wk"], prec).reshape(B, S, H, dh) * (dh**-0.5)
     v = _blockdiag_proj(xi, p["wv"], prec).reshape(B, S, H, dh)
-    gates = rr_dot(xi, p["w_if"], prec).reshape(B, S, H, 2)
+    gates = dot(xi, p["w_if"], prec, site="xlstm.gates").reshape(B, S, H, 2)
     log_i = jax.nn.log_sigmoid(gates[..., 0])
     log_f = jax.nn.log_sigmoid(gates[..., 1])
 
@@ -160,7 +159,7 @@ def mlstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     y, new_state = _mlstm_chunked(q, k, v, log_i, log_f, state)
     y = y.reshape(B, S, li)
     y = rmsnorm(y, p["norm"], cfg.norm_eps) * silu(z)
-    return rr_dot(y, p["down"], prec), new_state
+    return dot(y, p["down"], prec, site="xlstm.down"), new_state
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
@@ -213,7 +212,7 @@ def _slstm_step(p, carry, wx, cfg: ModelConfig):
 def slstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     B, S, d = x.shape
     li = cfg.lstm_inner
-    wx = rr_dot(x, p["w_in"], prec)  # (B, S, 4*li) gate pre-activations
+    wx = dot(x, p["w_in"], prec, site="slstm.w_in")  # (B, S, 4*li) gate pre-activations
     if state is None:
         state = init_slstm_state(cfg, B)
 
@@ -223,7 +222,7 @@ def slstm_apply(p, x, cfg: ModelConfig, prec: PrecisionConfig, state=None):
     (c, h), hs = jax.lax.scan(step, (state.c, state.h), jnp.moveaxis(wx, 1, 0))
     y = jnp.moveaxis(hs, 0, 1)  # (B, S, li)
     y = rmsnorm(y, p["norm"], cfg.norm_eps)
-    return rr_dot(y, p["down"], prec), SLSTMState(c=c, h=h)
+    return dot(y, p["down"], prec, site="slstm.down"), SLSTMState(c=c, h=h)
 
 
 def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:

@@ -25,9 +25,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-
-from .precision_ops import pmul
+from repro.precision import PrecisionConfig, multiply
 
 __all__ = ["HeatConfig", "initial_condition", "heat_step", "simulate"]
 
@@ -76,8 +74,8 @@ def heat_step(u, cfg: HeatConfig, prec: PrecisionConfig):
     around each multiplication; only the multiplies see the low bitwidth.
     """
     lap = u[:-2] - 2.0 * u[1:-1] + u[2:]  # adds in f32
-    flux = pmul(jnp.float32(cfg.alpha), lap, prec)  # multiplier 1
-    upd = pmul(flux, jnp.float32(cfg.dtodx2), prec)  # multiplier 2
+    flux = multiply(jnp.float32(cfg.alpha), lap, prec, site="heat.flux")  # multiplier 1
+    upd = multiply(flux, jnp.float32(cfg.dtodx2), prec, site="heat.update")  # multiplier 2
     interior = u[1:-1] + upd
     return jnp.concatenate([u[:1], interior, u[-1:]])
 

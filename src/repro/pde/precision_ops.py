@@ -1,68 +1,39 @@
-"""Elementwise precision-policy operations used by the PDE solvers.
+"""Backward-compatible shims: PDE elementwise ops over ``repro.precision``.
 
 The paper's system multiplies through R2F2 (or a fixed-format unit) while
 additions run on a conventional (wider-accumulator) adder and state is
-*stored* in the low-bitwidth format. These three primitives encode that
-split so the solvers read like the numerics they implement:
+*stored* in the low-bitwidth format. These primitives keep that vocabulary
+for solver code, delegating to the engine API (DESIGN.md §4):
 
-  pmul(a, b, cfg)  — a multiplication issued to the policy's multiplier
-  pstore(x, cfg)   — state written back to low-bitwidth storage
-  pdiv(a, b, cfg)  — division; R2F2 is a multiplier, so division stays in
-                     the substrate precision (f32) under every rr mode and
-                     is format-rounded only for fixed-format units.
+  pmul(a, b, cfg)  == repro.precision.multiply  — policy's multiplier
+  pstore(x, cfg)   == repro.precision.store     — low-bitwidth write-back
+  pdiv(a, b, cfg)  == repro.precision.divide    — R2F2 is a multiplier, so
+                      division stays in the substrate precision (f32) under
+                      every rr mode; format-rounded only for fixed units.
+
+``pmul`` additionally accepts ``tracker``/``site`` (named sites, e.g.
+``site="heat.flux"``) and then returns ``(out, tracker)`` — the deployment
+story for solvers, mirroring ``rr_einsum``'s uniform tracker contract.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core.flexformat import quantize_em
-from repro.core.policy import PrecisionConfig
-from repro.core.r2f2 import r2f2_multiply
-
 __all__ = ["pmul", "pstore", "pdiv"]
 
 
-def pmul(a, b, cfg: PrecisionConfig):
-    a = jnp.asarray(a, jnp.float32)
-    b = jnp.asarray(b, jnp.float32)
-    if cfg.mode == "f32":
-        return a * b
-    if cfg.mode in ("bf16", "deploy"):
-        return (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)).astype(jnp.float32)
-    if cfg.mode == "fixed":
-        e, m = cfg.fixed_em
-        p = quantize_em(a, e, m) * quantize_em(b, e, m)
-        return quantize_em(p, e, m)
-    # rr modes: per-tensor runtime split (PDE fields are one locality cluster;
-    # the Pallas kernels do the same per VMEM block)
-    out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
-    return out
+def pmul(a, b, cfg, *, tracker=None, site=None):
+    from repro.precision import multiply
+
+    return multiply(a, b, cfg, tracker=tracker, site=site)
 
 
-def pstore(x, cfg: PrecisionConfig):
-    x = jnp.asarray(x, jnp.float32)
-    if cfg.mode == "f32":
-        return x
-    if cfg.mode in ("bf16", "deploy"):
-        return x.astype(jnp.bfloat16).astype(jnp.float32)
-    if cfg.mode == "fixed":
-        e, m = cfg.fixed_em
-        return quantize_em(x, e, m)
-    # rr storage: minimal-k format for the live range (paper Fig. 4a layout)
-    from repro.core.r2f2 import _tile_max_exp, select_k_operand  # local to avoid cycle
+def pstore(x, cfg):
+    from repro.precision import store
 
-    me, _ = _tile_max_exp(x, None)
-    k = select_k_operand(me, cfg.fmt)
-    return quantize_em(x, cfg.fmt.eb + k, cfg.fmt.mb + cfg.fmt.fx - k)
+    return store(x, cfg)
 
 
-def pdiv(a, b, cfg: PrecisionConfig):
-    a = jnp.asarray(a, jnp.float32)
-    b = jnp.asarray(b, jnp.float32)
-    if cfg.mode == "fixed":
-        e, m = cfg.fixed_em
-        return quantize_em(quantize_em(a, e, m) / quantize_em(b, e, m), e, m)
-    if cfg.mode in ("bf16", "deploy"):
-        return (a.astype(jnp.bfloat16) / b.astype(jnp.bfloat16)).astype(jnp.float32)
-    return a / b
+def pdiv(a, b, cfg):
+    from repro.precision import divide
+
+    return divide(a, b, cfg)

@@ -23,9 +23,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
-
-from .precision_ops import pmul
+from repro.precision import PrecisionConfig, multiply
 
 __all__ = ["SWEConfig", "initial_state", "swe_step", "simulate"]
 
@@ -69,12 +67,13 @@ def initial_state(cfg: SWEConfig):
 
 def _momentum_flux_x(q1, q3, prec: PrecisionConfig):
     """The paper's substituted equation: q1*q1/q3 + 0.5*g*q3*q3, with its
-    multiplications on the policy's multiplier (division stays on the f32
-    divider — R2F2 is a multiplier)."""
-    t1 = pmul(q1, q1, prec)
+    multiplications on the policy's multiplier. The division stays on the
+    f32 divider like every other division in this solver (R2F2 is a
+    multiplier; the paper substitutes only the multiplications)."""
+    t1 = multiply(q1, q1, prec, site="swe.q1q1")
     t2 = t1 / q3
-    t3 = pmul(q3, q3, prec)
-    t4 = pmul(jnp.float32(0.5 * G), t3, prec)
+    t3 = multiply(q3, q3, prec, site="swe.q3q3")
+    t4 = multiply(jnp.float32(0.5 * G), t3, prec, site="swe.gq3")
     return t2 + t4
 
 

@@ -1,0 +1,124 @@
+"""repro.precision — the single integration point for precision-policy math.
+
+The paper ships *one* runtime-reconfigurable multiplier that every workload
+shares; this package is that multiplier's software seam. All policy-aware
+arithmetic — model contractions, PDE elementwise products, state stores,
+gradient compression — routes through one :class:`PrecisionEngine` resolved
+from the config's mode by a string-keyed registry:
+
+    from repro.precision import PRESETS, get_engine, contract, dot, multiply
+
+    prec = PRESETS["r2f2_16"]                      # rr_tile engine
+    y = dot(x, w, prec, site="mlp.up")             # dense-layer contraction
+    out = contract("bshd,bthd->bhst", q, k, prec, site="attn.qk")
+    p = multiply(alpha, lap, prec, site="heat.flux")
+
+Tracked modes thread a :class:`SiteTracker` (named sites) or a raw
+``RangeTracker`` (legacy integer sites) through the same calls::
+
+    st = site_tracker_init(("attn.qk", "attn.pv"), prec.fmt)
+    out, st = contract(spec, q, k, prec_tracked, tracker=st, site="attn.qk")
+
+Return contract: with ``tracker=None`` the functions return the array; with
+a tracker they return ``(out, tracker)`` — for EVERY mode (the old
+``rr_einsum`` surface was inconsistent about this; the engine layer is not).
+
+New numeric behaviours are drop-in: implement ``prepare_operand`` on a
+``PrecisionEngine`` subclass, ``register_engine("fp8", MyEngine)``, and
+``PrecisionConfig(mode="fp8")`` is immediately valid everywhere. Set
+``PrecisionConfig(use_kernels=True)`` to let rr engines dispatch eligible
+2-D contractions to the Pallas ``r2f2_matmul`` kernel (DESIGN.md §7).
+
+``core.rr_dot`` (``rr_einsum``/``rr_dot``/``rr_operand``) and
+``pde.precision_ops`` (``pmul``/``pstore``/``pdiv``) remain as thin
+delegating shims for backward compatibility.
+"""
+
+from __future__ import annotations
+
+from .engine import PrecisionEngine
+from .registry import get_engine, is_known_mode, known_modes, register_engine
+from .sites import SiteTracker, resolve_site, site_tracker_init
+from . import engines as _engines  # noqa: F401 — registers the six builtins
+
+# Convenience re-exports: the precision surface in one import.
+from repro.core.flexformat import FlexFormat
+from repro.core.policy import PRESETS, PrecisionConfig, RangeTracker, tracker_init
+
+__all__ = [
+    # engine plumbing
+    "PrecisionEngine",
+    "register_engine",
+    "get_engine",
+    "known_modes",
+    "is_known_mode",
+    # named sites
+    "SiteTracker",
+    "site_tracker_init",
+    "resolve_site",
+    # functional API
+    "prepare_operand",
+    "multiply",
+    "divide",
+    "store",
+    "contract",
+    "dot",
+    "operand_dtype",
+    # config re-exports
+    "FlexFormat",
+    "PrecisionConfig",
+    "PRESETS",
+    "RangeTracker",
+    "tracker_init",
+]
+
+
+def prepare_operand(x, cfg, *, k=None):
+    """Policy-round one operand. Returns ``(x_q, k)``."""
+    return get_engine(cfg).prepare_operand(x, cfg, k=k)
+
+
+def multiply(a, b, cfg, *, tracker=None, site=None):
+    """Elementwise product on the policy's multiplier.
+
+    Returns ``out`` — or ``(out, tracker)`` whenever a tracker is passed.
+    """
+    out, tracker_out = get_engine(cfg).multiply(a, b, cfg, tracker=tracker, site=site)
+    return (out, tracker_out) if tracker is not None else out
+
+
+def divide(a, b, cfg):
+    """Elementwise quotient (most policies: the substrate's f32 divider)."""
+    return get_engine(cfg).divide(a, b, cfg)
+
+
+def store(x, cfg):
+    """Round state to the policy's storage format."""
+    return get_engine(cfg).store(x, cfg)
+
+
+def contract(spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+    """Einsum with policy-treated operands and f32 accumulation.
+
+    Returns ``out`` — or ``(out, tracker)`` whenever a tracker is passed,
+    for every mode. ``site`` may always be given (it documents the
+    multiplication site); it only has an effect when a tracker is threaded.
+    """
+    out, tracker_out = get_engine(cfg).contract(
+        spec, a, b, cfg, tracker=tracker, site=site, shared_k=shared_k
+    )
+    return (out, tracker_out) if tracker is not None else out
+
+
+def dot(x, w, cfg, **kw):
+    """Dense-layer contraction: last dim of ``x`` against first of ``w``."""
+    n = x.ndim
+    lhs = "".join(chr(ord("a") + i) for i in range(n - 1)) + "z"
+    rhs_extra = "".join(chr(ord("m") + i) for i in range(w.ndim - 1))
+    spec = f"{lhs},z{rhs_extra}->{lhs[:-1]}{rhs_extra}"
+    return contract(spec, x, w, cfg, **kw)
+
+
+def operand_dtype(cfg):
+    """Wire dtype of prepared operands (what collectives should move)."""
+    return get_engine(cfg).operand_dtype(cfg)

@@ -1,0 +1,146 @@
+"""The PrecisionEngine protocol + numeric helpers shared by engines.
+
+An engine is the *whole* answer to "what does this policy do to arithmetic":
+
+    prepare_operand(x, cfg, *, k=None) -> (x_q, k)   one operand, policy-rounded
+    multiply(a, b, cfg, *, tracker, site)            elementwise product
+    divide(a, b, cfg)                                elementwise quotient
+    store(x, cfg)                                    state write-back rounding
+    contract(spec, a, b, cfg, *, tracker, site, shared_k)
+                                                     einsum with policy operands
+
+``contract`` and ``multiply`` ALWAYS return ``(out, tracker)`` — tracker is
+passed through unchanged by engines that do not track (the old
+``rr_einsum`` sometimes returned a bare array, sometimes a tuple; the engine
+layer is where that contract is now uniform). ``tracker`` may be a raw
+:class:`repro.core.policy.RangeTracker` with an integer ``site`` (legacy) or
+a :class:`repro.precision.sites.SiteTracker` with a *named* site
+(``site="attn.qk"``) — resolution is handled once, in
+:func:`repro.precision.sites.resolve_site`.
+
+The base class implements every method generically on top of
+``prepare_operand`` + f32 accumulation, so a new engine (fp8, stochastic
+rounding, ...) is usually ``prepare_operand`` + ``register_engine`` and
+nothing else.
+
+Helpers here are verbatim moves from the pre-engine ``core/rr_dot.py`` —
+their numerics are load-bearing (bit-exactness tests compare against them).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PrecisionEngine", "native_bf16", "bf16_pair", "tile_shape_for", "ste"]
+
+
+def native_bf16() -> bool:
+    """Keep operands in native bf16 inside contractions?
+
+    True on TPU (MXU semantics) and for compile-only dry-runs
+    (REPRO_NATIVE_BF16=1 — accurate HLO byte accounting). False on CPU
+    execution paths: XLA:CPU cannot execute batched bf16xbf16->f32 dots, and
+    casting the rounded operands back to f32 is value-identical to an MXU's
+    exact-product/f32-accumulate anyway.
+    """
+    env = os.environ.get("REPRO_NATIVE_BF16")
+    if env is not None:
+        return env == "1"
+    return jax.default_backend() == "tpu"
+
+
+def bf16_pair(a, b):
+    a = a.astype(jnp.bfloat16)
+    b = b.astype(jnp.bfloat16)
+    if not native_bf16():
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    return a, b
+
+
+def tile_shape_for(x, tile: int) -> Optional[Tuple[int, ...]]:
+    """Tiles of ``tile`` on the last two dims (1 elsewhere) when divisible;
+    per-tensor fallback otherwise."""
+    if x.ndim == 0:
+        return None
+    shape = [1] * x.ndim
+    for ax in range(max(0, x.ndim - 2), x.ndim):
+        shape[ax] = tile if x.shape[ax] % tile == 0 else x.shape[ax]
+    return tuple(shape)
+
+
+def ste(x, xq):
+    """Straight-through estimator: bit-exact quantized forward, identity
+    backward — the emulation's integer ops are non-differentiable, and STE
+    is the standard QAT contract for training through quantizers."""
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+class PrecisionEngine:
+    """Base engine: f32 pass-through semantics, generic contract.
+
+    Subclasses override ``prepare_operand`` (and whichever of the other
+    methods need non-generic treatment). ``name`` is stamped by
+    ``register_engine``; ``emulated`` marks bit-exact-but-slow engines
+    (drives ``PrecisionConfig.is_emulated``).
+    """
+
+    name: str = "?"
+    emulated: bool = False
+
+    # -- operand treatment ---------------------------------------------------
+
+    def prepare_operand(self, x, cfg, *, k=None):
+        """Quantize one operand per the policy. Returns ``(x_q, k)`` where
+        ``k`` is the chosen flexible split (None for non-flexible engines)."""
+        del cfg, k
+        return jnp.asarray(x, jnp.float32), None
+
+    def operand_dtype(self, cfg):
+        """The wire dtype of prepared operands — what collectives should move
+        (moe dispatch payloads, grad compression, ...)."""
+        del cfg
+        return jnp.float32
+
+    # -- elementwise ---------------------------------------------------------
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        """Elementwise product on the policy's multiplier.
+
+        Returns ``(out, tracker)``; non-tracking engines pass the tracker
+        through untouched.
+        """
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        aq, _ = self.prepare_operand(a, cfg)
+        bq, _ = self.prepare_operand(b, cfg)
+        return aq * bq, tracker
+
+    def divide(self, a, b, cfg):
+        """Division; most multipliers (incl. R2F2) leave it to the substrate
+        divider, so the default is plain f32."""
+        del cfg
+        return jnp.asarray(a, jnp.float32) / jnp.asarray(b, jnp.float32)
+
+    def store(self, x, cfg):
+        """State written back to the policy's storage format."""
+        xq, _ = self.prepare_operand(jnp.asarray(x, jnp.float32), cfg)
+        return xq
+
+    # -- contractions --------------------------------------------------------
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        """Einsum with policy-treated operands, f32 accumulation.
+
+        ALWAYS returns ``(out, tracker)`` — the uniform return contract the
+        thin ``rr_einsum`` shim unwraps for backward compatibility.
+        """
+        del site, shared_k
+        aq, _ = self.prepare_operand(jnp.asarray(a), cfg)
+        bq, _ = self.prepare_operand(jnp.asarray(b), cfg)
+        out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
+        return out, tracker

@@ -1,0 +1,307 @@
+"""The six builtin precision engines — one per historical ``cfg.mode``.
+
+Every ``if cfg.mode == ...`` chain that used to be copy-pasted across
+``core/rr_dot.py`` and ``pde/precision_ops.py`` lives here as a class each;
+dispatch is a registry lookup (:func:`repro.precision.registry.get_engine`).
+Numeric bodies are verbatim moves from the pre-engine modules — bit-exact
+parity with the old surface is asserted by tests/test_precision_engine.py.
+
+Engine map:
+
+  f32         reference arithmetic (pass-through)
+  bf16        plain mixed-precision baseline
+  fixed       fixed E(e)M(m) emulation (the paper's failing E5M10 baseline)
+  rr_tile     R2F2 emulation, per-tile runtime k selection (+ Pallas fast
+              path when ``cfg.use_kernels`` and the contraction is eligible)
+  rr_tracked  R2F2 emulation, k from a (Site)Tracker site
+  deploy      bf16 arithmetic + tracker-driven k bookkeeping (MXU-rate proxy)
+
+Kernel-dispatch eligibility (DESIGN.md §7): a contraction reaches the Pallas
+``r2f2_matmul`` kernel iff ``cfg.use_kernels`` is set, both operands are
+2-D, the spec is a plain row-by-column matmul (``"ab,bc->ac"`` up to letter
+renaming), no tracker drives ``k`` (the kernel picks its own per-block-pair
+shared split — the paper's same-format rule), and every dim is divisible by
+its clamped kernel block. The fast path is forward-only (no custom VJP);
+``use_kernels`` defaults to False so training paths are untouched.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax.numpy as jnp
+
+from repro.core.flexformat import quantize_em, quantize_em_with_flags
+from repro.core.policy import tracker_k, tracker_update
+from repro.core.r2f2 import _tile_max_exp, r2f2_multiply, select_k, select_k_operand
+
+from .engine import PrecisionEngine, bf16_pair, ste, tile_shape_for
+from .registry import register_engine
+from .sites import resolve_site, rewrap
+
+__all__ = [
+    "F32Engine",
+    "BF16Engine",
+    "FixedEngine",
+    "RRTileEngine",
+    "RRTrackedEngine",
+    "DeployEngine",
+    "kernel_eligible",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pallas fast-path eligibility
+# ---------------------------------------------------------------------------
+
+# "ab,bc->ac" with any distinct letters: 2-D row-by-column matmul, the only
+# contraction shape the blocked kernel implements.
+_MATMUL_SPEC = re.compile(r"^([a-zA-Z])([a-zA-Z]),([a-zA-Z])([a-zA-Z])->([a-zA-Z])([a-zA-Z])$")
+
+
+def kernel_eligible(spec: str, a, b, cfg) -> bool:
+    """Can this contraction run on the Pallas ``r2f2_matmul`` kernel?"""
+    if not getattr(cfg, "use_kernels", False):
+        return False
+    if getattr(a, "ndim", 0) != 2 or getattr(b, "ndim", 0) != 2:
+        return False
+    m = _MATMUL_SPEC.match(spec.replace(" ", ""))
+    if m is None:
+        return False
+    i, j, j2, l, oi, ol = m.groups()
+    if len({i, j, l}) != 3 or j2 != j or (oi, ol) != (i, l):
+        return False
+    (M, K), (K2, N) = a.shape, b.shape
+    if K != K2:
+        return False
+    # lazy: keep pallas off cold import paths; divisibility must mirror the
+    # kernel's own clamped-block check, so read its authoritative defaults
+    from repro.kernels.r2f2_matmul import DEFAULT_BLOCKS
+
+    bm, bn, bk = DEFAULT_BLOCKS
+    return all(d % min(blk, d) == 0 for d, blk in ((M, bm), (N, bn), (K, bk)))
+
+
+def _kernel_contract(a, b, cfg):
+    from repro.kernels import ops as kernel_ops  # lazy: keep pallas off cold paths
+
+    a32 = jnp.asarray(a, jnp.float32)
+    b32 = jnp.asarray(b, jnp.float32)
+    return kernel_ops.r2f2_matmul(a32, b32, cfg.fmt, tail_approx=cfg.tail_approx)
+
+
+# ---------------------------------------------------------------------------
+# engines
+# ---------------------------------------------------------------------------
+
+
+@register_engine("f32")
+class F32Engine(PrecisionEngine):
+    """Reference arithmetic: everything stays f32."""
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        del site, shared_k
+        out = jnp.einsum(spec, jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+        return out, tracker
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        return jnp.asarray(a, jnp.float32) * jnp.asarray(b, jnp.float32), tracker
+
+    def store(self, x, cfg):
+        return jnp.asarray(x, jnp.float32)
+
+
+@register_engine("bf16")
+class BF16Engine(PrecisionEngine):
+    """Plain mixed precision: bf16 operands, f32 accumulate."""
+
+    def prepare_operand(self, x, cfg, *, k=None):
+        del cfg, k
+        x = jnp.asarray(x, jnp.float32)
+        return x.astype(jnp.bfloat16).astype(jnp.float32), None
+
+    def operand_dtype(self, cfg):
+        del cfg
+        return jnp.bfloat16
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        del site, shared_k
+        aq, bq = bf16_pair(jnp.asarray(a), jnp.asarray(b))
+        out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
+        return out, tracker
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out = (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)).astype(jnp.float32)
+        return out, tracker
+
+    def divide(self, a, b, cfg):
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        return (a.astype(jnp.bfloat16) / b.astype(jnp.bfloat16)).astype(jnp.float32)
+
+
+@register_engine("fixed")
+class FixedEngine(PrecisionEngine):
+    """Fixed E(e)M(m) emulation — e.g. E5M10, the paper's failing baseline."""
+
+    emulated = True
+
+    def prepare_operand(self, x, cfg, *, k=None):
+        del k
+        x = jnp.asarray(x, jnp.float32)
+        e, m = cfg.fixed_em
+        return ste(x, quantize_em_with_flags(x, e, m)[0]), None
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        del site, shared_k
+        e, m = cfg.fixed_em
+        af = jnp.asarray(a, jnp.float32)
+        bf = jnp.asarray(b, jnp.float32)
+        aq = ste(af, quantize_em_with_flags(af, e, m)[0])
+        bq = ste(bf, quantize_em_with_flags(bf, e, m)[0])
+        return jnp.einsum(spec, aq, bq), tracker
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        e, m = cfg.fixed_em
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        p = quantize_em(a, e, m) * quantize_em(b, e, m)
+        return quantize_em(p, e, m), tracker
+
+    def divide(self, a, b, cfg):
+        e, m = cfg.fixed_em
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        return quantize_em(quantize_em(a, e, m) / quantize_em(b, e, m), e, m)
+
+    def store(self, x, cfg):
+        e, m = cfg.fixed_em
+        return quantize_em(jnp.asarray(x, jnp.float32), e, m)
+
+
+def _shared_k(a, b, cfg):
+    """One split per contraction: max need across both whole operands plus
+    the product bound (paper's same-format rule)."""
+    ae, _ = _tile_max_exp(a, None)
+    be, _ = _tile_max_exp(b, None)
+    return select_k(ae, be, cfg.fmt)
+
+
+@register_engine("rr_tile")
+class RRTileEngine(PrecisionEngine):
+    """R2F2 emulation with per-tile runtime k selection (stateless)."""
+
+    emulated = True
+
+    def prepare_operand(self, x, cfg, *, k=None):
+        x = jnp.asarray(x, jnp.float32)
+        fmt = cfg.fmt
+        if k is None:
+            me, bcast = _tile_max_exp(x, tile_shape_for(x, cfg.tile))
+            k = select_k_operand(me, fmt)  # operand-range-only need
+            k_full = bcast(k)
+        else:
+            k = jnp.asarray(k, jnp.int32)
+            if k.ndim == 0:
+                k_full = k
+            else:
+                _, bcast = _tile_max_exp(x, tile_shape_for(x, cfg.tile))
+                k_full = bcast(k)
+        e_bits = fmt.eb + k_full
+        m_bits = fmt.mb + fmt.fx - k_full
+        xq, _, _ = quantize_em_with_flags(x, e_bits, m_bits)
+        return ste(x, xq), k
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        del site
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if kernel_eligible(spec, a, b, cfg):
+            return _kernel_contract(a, b, cfg), tracker
+        k = None
+        if shared_k:
+            k = _shared_k(a.astype(jnp.float32), b.astype(jnp.float32), cfg)
+        aq, _ = self.prepare_operand(a, cfg, k=k)
+        bq, _ = self.prepare_operand(b, cfg, k=k)
+        out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
+        return out, tracker
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        # per-tensor runtime split (PDE fields are one locality cluster; the
+        # Pallas kernels do the same per VMEM block)
+        del site
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
+        return out, tracker
+
+    def store(self, x, cfg):
+        # rr storage: minimal-k format for the live range (paper Fig. 4a)
+        x = jnp.asarray(x, jnp.float32)
+        me, _ = _tile_max_exp(x, None)
+        k = select_k_operand(me, cfg.fmt)
+        return quantize_em(x, cfg.fmt.eb + k, cfg.fmt.mb + cfg.fmt.fx - k)
+
+
+@register_engine("rr_tracked")
+class RRTrackedEngine(RRTileEngine):
+    """R2F2 emulation with k carried across steps by a (Site)Tracker."""
+
+    emulated = True
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        del shared_k
+        state, idx = resolve_site(tracker, site)
+        if state is None or idx is None:
+            raise ValueError("rr_tracked needs tracker+site")
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        k = tracker_k(state, idx)
+        state = tracker_update(state, idx, a, b, cfg)
+        aq, _ = self.prepare_operand(a, cfg, k=k)
+        bq, _ = self.prepare_operand(b, cfg, k=k)
+        out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
+        return out, rewrap(tracker, state)
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        state, idx = resolve_site(tracker, site)
+        if state is None or idx is None:
+            # untracked fallback: stateless per-tensor selection (rr_tile)
+            out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
+            return out, tracker
+        k = tracker_k(state, idx)
+        state = tracker_update(state, idx, a, b, cfg)
+        out, _ = r2f2_multiply(a, b, cfg.fmt, k=k, tile_shape=None, tail_approx=cfg.tail_approx)
+        return out, rewrap(tracker, state)
+
+
+@register_engine("deploy")
+class DeployEngine(BF16Engine):
+    """bf16 arithmetic (the MXU-rate proxy for 16-bit flexible operands) +
+    tracker-driven k bookkeeping, so dry-run/roofline numbers reflect what
+    R2F2 silicon would execute while the format choice stays observable."""
+
+    def _track(self, tracker, site, a, b, cfg):
+        state, idx = resolve_site(tracker, site)
+        if state is not None and idx is not None:
+            tracker = rewrap(tracker, tracker_update(state, idx, a, b, cfg))
+        return tracker
+
+    def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        out, _ = super().contract(spec, a, b, cfg, shared_k=shared_k)
+        return out, self._track(tracker, site, a, b, cfg)
+
+    def multiply(self, a, b, cfg, *, tracker=None, site=None):
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out, _ = super().multiply(a, b, cfg)
+        return out, self._track(tracker, site, a, b, cfg)

@@ -1,0 +1,82 @@
+"""String-keyed engine registry — the pluggability point of the precision API.
+
+Every ``PrecisionConfig.mode`` names an engine registered here. The six
+builtin engines (f32 / bf16 / fixed / rr_tile / rr_tracked / deploy) are
+registered when :mod:`repro.precision.engines` first loads; third-party
+engines (an fp8 engine, a stochastic-rounding engine, ...) become drop-in
+modes the moment they call :func:`register_engine` — ``PrecisionConfig``
+validation, :func:`get_engine` dispatch, and every call site that already
+routes through the engine API pick them up with zero further edits.
+
+The single source of truth for valid modes is
+``repro.core.policy.KNOWN_MODES``: it is seeded with the six builtins
+(whose engines load lazily) and :func:`register_engine` extends it, so
+config validation and engine dispatch can never disagree about a name.
+
+This module deliberately imports nothing from :mod:`repro.core` at module
+scope (all policy access is function-local), so it is importable while
+``repro.core`` is still mid-initialisation.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, Tuple, Union
+
+if TYPE_CHECKING:  # pragma: no cover - type-only; avoids a core import cycle
+    from repro.core.policy import PrecisionConfig
+    from repro.precision.engine import PrecisionEngine
+
+__all__ = ["register_engine", "get_engine", "known_modes", "is_known_mode"]
+
+_REGISTRY: Dict[str, "PrecisionEngine"] = {}
+
+
+def register_engine(name: str, engine=None):
+    """Register ``engine`` (an instance or a class) under ``name``.
+
+    Usable directly (``register_engine("fp8", FP8Engine())``) or as a class
+    decorator (``@register_engine("fp8")``). Re-registering a name replaces
+    the previous engine — deliberate, so tests/experiments can shadow a
+    builtin. Returns the engine/class for decorator chaining.
+    """
+    if engine is None:
+        return lambda e: register_engine(name, e)
+    instance = engine() if isinstance(engine, type) else engine
+    instance.name = name
+    _REGISTRY[name] = instance
+
+    # a registered engine's mode is a constructible PrecisionConfig mode
+    from repro.core.policy import KNOWN_MODES  # runtime: policy is loaded by now
+
+    KNOWN_MODES.add(name)
+    return engine
+
+
+def _load_builtins() -> None:
+    if not _REGISTRY:
+        from repro.precision import engines  # noqa: F401 — registers on import
+
+
+def get_engine(cfg: Union["PrecisionConfig", str]) -> "PrecisionEngine":
+    """Resolve a config (or bare mode string) to its registered engine."""
+    mode = cfg if isinstance(cfg, str) else cfg.mode
+    _load_builtins()
+    try:
+        return _REGISTRY[mode]
+    except KeyError:
+        raise KeyError(
+            f"no precision engine registered for mode {mode!r}; known: {known_modes()}"
+        ) from None
+
+
+def known_modes() -> Tuple[str, ...]:
+    """All modes a PrecisionConfig may currently carry."""
+    from repro.core.policy import KNOWN_MODES
+
+    return tuple(sorted(KNOWN_MODES))
+
+
+def is_known_mode(mode: str) -> bool:
+    from repro.core.policy import KNOWN_MODES
+
+    return mode in KNOWN_MODES

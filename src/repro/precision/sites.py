@@ -1,0 +1,120 @@
+"""Named multiplication sites: string keys over the RangeTracker pytree.
+
+The paper's precision adjustment unit is *per multiplier instance*; model
+code used to identify its multipliers by hand-numbered integers
+(``site=0, 1, ...``), which is exactly as brittle as it sounds — insert one
+matmul and every later index shifts. A :class:`SiteTracker` owns the
+name -> row mapping: the names are static pytree metadata (so a SiteTracker
+jits, scans, and checkpoints like any other carried state — the site
+strings never become tracers), and the numeric state is the existing
+:class:`repro.core.policy.RangeTracker` verbatim.
+
+Naming convention (DESIGN.md §3): ``"<subsystem>.<op>"`` —
+``"attn.qk"``, ``"mlp.down"``, ``"heat.flux"``, ``"swe.q3q3"``. Engines
+resolve either form through :func:`resolve_site`, so legacy
+``(RangeTracker, int)`` callers keep working unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core.policy import RangeTracker, tracker_init
+from repro.core.flexformat import FlexFormat
+
+__all__ = ["SiteTracker", "site_tracker_init", "resolve_site"]
+
+
+@jax.tree_util.register_pytree_node_class
+class SiteTracker:
+    """A RangeTracker whose rows are addressed by name.
+
+    ``names`` is aux (static) data: two SiteTrackers with different site
+    lists are different pytree types, which is what you want — a scan carry
+    can never silently re-number its sites.
+    """
+
+    def __init__(self, names: Tuple[str, ...], state: RangeTracker):
+        self.names = tuple(names)
+        self.state = state
+        if len(self.names) != len(set(self.names)):
+            raise ValueError(f"duplicate site names: {self.names}")
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.state,), self.names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        (state,) = children
+        obj = object.__new__(cls)  # skip __init__ checks on trace-time rebuilds
+        obj.names = names
+        obj.state = state
+        return obj
+
+    # -- site addressing ----------------------------------------------------
+
+    def index(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(
+                f"unknown precision site {name!r}; tracked sites: {self.names}"
+            ) from None
+
+    def k(self, name: str):
+        """Current flexible split for a named site."""
+        return self.state.k[self.index(name)]
+
+    def with_state(self, state: RangeTracker) -> "SiteTracker":
+        return SiteTracker(self.names, state)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def __repr__(self) -> str:
+        return f"SiteTracker(sites={list(self.names)})"
+
+
+def site_tracker_init(
+    names: Sequence[str], fmt: FlexFormat, k0: Optional[int] = None
+) -> SiteTracker:
+    """Fresh tracker with one row per named site (start wide, shrink via
+    redundancy — same convention as :func:`repro.core.policy.tracker_init`)."""
+    return SiteTracker(tuple(names), tracker_init(len(names), fmt, k0=k0))
+
+
+def resolve_site(tracker, site) -> Tuple[Optional[RangeTracker], Optional[int]]:
+    """Normalize (tracker, site) to the raw ``(RangeTracker, int)`` engines
+    consume. Accepts:
+
+      * ``(SiteTracker, "name")``  — the named-site API;
+      * ``(RangeTracker, int)``    — the legacy hand-numbered API;
+      * ``(None, anything)``       — untracked call (site names are allowed
+        and simply ignored, so call sites can document their site name
+        whether or not a tracker is threaded).
+    """
+    if tracker is None:
+        return None, None
+    if isinstance(tracker, SiteTracker):
+        if site is None:
+            return tracker.state, None
+        return tracker.state, tracker.index(site) if isinstance(site, str) else int(site)
+    if isinstance(site, str):
+        raise TypeError(
+            f"named site {site!r} needs a SiteTracker; got {type(tracker).__name__} "
+            "(wrap it with SiteTracker(names, state))"
+        )
+    return tracker, site
+
+
+def rewrap(tracker, state: Optional[RangeTracker]):
+    """Re-attach updated numeric state to the caller's tracker container."""
+    if state is None or tracker is None:
+        return tracker
+    if isinstance(tracker, SiteTracker):
+        return tracker.with_state(state)
+    return state

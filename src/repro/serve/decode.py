@@ -14,8 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import PrecisionConfig
 from repro.models import init_decode_state, prefill
+from repro.precision import PrecisionConfig
 from repro.models.config import ModelConfig
 from repro.train.step import make_serve_step
 

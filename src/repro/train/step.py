@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.policy import PrecisionConfig
 from repro.models import decode_step, init_decode_state, lm_loss, model_init
+from repro.precision import PrecisionConfig
 from repro.models.config import ModelConfig
 from repro.train.optimizer import OptConfig, opt_init, opt_update
 
@@ -233,10 +233,10 @@ def make_train_step(
                 lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
             )
         elif tcfg.grad_comm == "rr16":
-            from repro.core.rr_dot import rr_operand  # local: avoid import cycle
+            from repro.precision import prepare_operand
 
             grads = jax.tree_util.tree_map(
-                lambda g: rr_operand(g, prec_rr16)[0], grads
+                lambda g: prepare_operand(g, prec_rr16)[0], grads
             )
 
         new_params, new_opt, metrics = opt_update(

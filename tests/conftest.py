@@ -1,0 +1,14 @@
+"""Shared test config: gate modules whose optional deps are absent.
+
+``hypothesis`` is not part of the baked runtime image; the two property-test
+modules that use it are skipped (not failed) when it is missing so the tier-1
+suite stays runnable everywhere. tests/test_precision_engine.py carries a
+hypothesis-free pack/unpack property sweep covering the same surface.
+"""
+
+collect_ignore = []
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore += ["test_flexformat.py", "test_r2f2.py"]

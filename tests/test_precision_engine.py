@@ -1,0 +1,378 @@
+"""The repro.precision engine surface: registry, named sites, shim parity,
+storage-format round-trip, and Pallas kernel dispatch (ISSUE 1 acceptance)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rr_einsum, rr_operand
+from repro.core.flexformat import FlexFormat, pack_r2f2, quantize_em, unpack_r2f2
+from repro.core.policy import KNOWN_MODES, PRESETS, PrecisionConfig, tracker_init
+from repro.pde.precision_ops import pdiv, pmul, pstore
+from repro.precision import (
+    PrecisionEngine,
+    SiteTracker,
+    contract,
+    divide,
+    dot,
+    get_engine,
+    multiply,
+    prepare_operand,
+    register_engine,
+    site_tracker_init,
+    store,
+)
+
+FMT = FlexFormat(3, 9, 3)
+ALL_MODES = ("f32", "bf16", "fixed", "rr_tile", "rr_tracked", "deploy")
+
+
+def _data(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.normal(0, 1, shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_all_presets_resolve(self):
+        for name, cfg in PRESETS.items():
+            eng = get_engine(cfg)
+            assert isinstance(eng, PrecisionEngine), name
+            assert eng.name == cfg.mode
+
+    def test_all_modes_resolve(self):
+        for mode in ALL_MODES:
+            assert get_engine(mode).name == mode
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(KeyError, match="no precision engine"):
+            get_engine("not-a-mode")
+
+    def test_unknown_config_mode_raises_at_construction(self):
+        with pytest.raises(ValueError, match="unknown precision mode"):
+            PrecisionConfig(mode="not-a-mode")
+
+    def test_custom_engine_is_drop_in(self):
+        """A registered engine immediately becomes a valid config mode and
+        receives dispatch — the fp8/stochastic-rounding extension path."""
+
+        class NegatingEngine(PrecisionEngine):
+            def prepare_operand(self, x, cfg, *, k=None):
+                return -jnp.asarray(x, jnp.float32), None
+
+        try:
+            register_engine("test_negate", NegatingEngine)
+            assert "test_negate" in KNOWN_MODES
+            cfg = PrecisionConfig(mode="test_negate")
+            x = _data((4, 4), seed=1)
+            w = _data((4, 4), seed=2)
+            out = contract("md,df->mf", x, w, cfg)  # (-x) @ (-w) == x @ w
+            np.testing.assert_allclose(np.asarray(out), x @ w, rtol=1e-6)
+            assert not cfg.is_emulated
+        finally:
+            from repro.precision.registry import _REGISTRY
+
+            _REGISTRY.pop("test_negate", None)
+            KNOWN_MODES.discard("test_negate")
+
+
+# ---------------------------------------------------------------------------
+# uniform return contract (the historical rr_einsum inconsistency)
+# ---------------------------------------------------------------------------
+
+
+class TestReturnContract:
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_tracker_in_tuple_out_every_mode(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        tr = tracker_init(1, FMT)
+        a, b = _data((8, 8), 1), _data((8, 8), 2)
+        res = rr_einsum("md,df->mf", a, b, cfg, tracker=tr, site=0)
+        assert isinstance(res, tuple) and len(res) == 2, mode
+        out, tr_out = res
+        assert out.shape == (8, 8)
+        assert tr_out is not None
+
+    @pytest.mark.parametrize("mode", [m for m in ALL_MODES if m != "rr_tracked"])
+    def test_no_tracker_bare_array_every_mode(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        out = rr_einsum("md,df->mf", _data((8, 8), 1), _data((8, 8), 2), cfg)
+        assert not isinstance(out, tuple), mode
+
+    def test_rr_tracked_without_tracker_raises(self):
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT)
+        with pytest.raises(ValueError, match="tracker"):
+            rr_einsum("md,df->mf", _data((8, 8)), _data((8, 8)), cfg)
+
+
+# ---------------------------------------------------------------------------
+# named sites
+# ---------------------------------------------------------------------------
+
+
+class TestSiteTracker:
+    def test_named_equals_legacy_integer_sites(self):
+        """SiteTracker + name must be bit-identical to RangeTracker + index."""
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT, ema=0.5)
+        st = site_tracker_init(("attn.qk", "heat.flux"), FMT)
+        raw = tracker_init(2, FMT)
+        a, b = _data((16, 16), 3, scale=30.0), _data((16, 16), 4)
+        for _ in range(3):
+            o_named, st = contract("md,df->mf", a, b, cfg, tracker=st, site="heat.flux")
+            o_raw, raw = rr_einsum("md,df->mf", a, b, cfg, tracker=raw, site=1)
+            np.testing.assert_array_equal(np.asarray(o_named), np.asarray(o_raw))
+        np.testing.assert_array_equal(np.asarray(st.state.k), np.asarray(raw.k))
+        assert int(st.k("heat.flux")) == int(raw.k[1])
+
+    def test_unknown_site_name_raises(self):
+        st = site_tracker_init(("a.b",), FMT)
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT)
+        with pytest.raises(KeyError, match="unknown precision site"):
+            contract("md,df->mf", _data((4, 4)), _data((4, 4)), cfg, tracker=st, site="zzz")
+
+    def test_named_site_on_raw_tracker_raises(self):
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT)
+        with pytest.raises(TypeError, match="SiteTracker"):
+            contract(
+                "md,df->mf", _data((4, 4)), _data((4, 4)), cfg,
+                tracker=tracker_init(1, FMT), site="attn.qk",
+            )
+
+    def test_roundtrip_under_jit(self):
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT)
+        st = site_tracker_init(("mlp.up", "mlp.down"), FMT)
+        w = _data((16, 16), 5)
+
+        @jax.jit
+        def step(st, x):
+            h, st = contract("md,df->mf", x, w, cfg, tracker=st, site="mlp.up")
+            out, st = contract("md,df->mf", h, w, cfg, tracker=st, site="mlp.down")
+            return out, st
+
+        x = _data((8, 16), 6, scale=100.0)
+        out, st2 = step(st, x)
+        assert isinstance(st2, SiteTracker)
+        assert st2.names == st.names  # names are static aux data
+        assert np.isfinite(np.asarray(out)).all()
+        assert int(st2.state.overflow_steps.sum()) >= 0
+
+    def test_roundtrip_under_scan(self):
+        """SiteTracker threads through lax.scan like any carried state."""
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT, ema=0.5)
+        st = site_tracker_init(("site.a",), FMT, k0=0)
+        w = _data((16, 16), 7)
+        xs = jnp.asarray(_data((5, 8, 16), 8, scale=1e4))  # spike: k must grow
+
+        def body(st, x):
+            out, st = contract("md,df->mf", x, w, cfg, tracker=st, site="site.a")
+            return st, out
+
+        st_fin, outs = jax.lax.scan(body, st, xs)
+        assert isinstance(st_fin, SiteTracker)
+        assert outs.shape == (5, 8, 16)
+        assert int(st_fin.k("site.a")) == FMT.fx  # 1e4 operands need the full split
+
+    def test_duplicate_site_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            site_tracker_init(("a", "a"), FMT)
+
+    def test_multiply_threads_named_sites(self):
+        """The PDE-facing elementwise op supports the same tracker contract."""
+        cfg = PrecisionConfig(mode="rr_tracked", fmt=FMT)
+        st = site_tracker_init(("heat.flux",), FMT, k0=0)
+        a = jnp.float32(3e4) * jnp.abs(jnp.asarray(_data((64,), 9))) + 1.0
+        out, st = multiply(a, a, cfg, tracker=st, site="heat.flux")
+        assert isinstance(st, SiteTracker)
+        assert int(st.k("heat.flux")) == FMT.fx  # 9e8 product forces max k
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence: old surface == engine surface, bit for bit
+# ---------------------------------------------------------------------------
+
+
+class TestShimEquivalence:
+    A = _data((32, 48), 10, scale=10.0)
+    B = _data((48, 16), 11, scale=0.1)
+
+    @pytest.mark.parametrize("mode", [m for m in ALL_MODES if m != "rr_tracked"])
+    def test_rr_einsum_matches_contract(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        old = rr_einsum("md,df->mf", self.A, self.B, cfg)
+        new = contract("md,df->mf", self.A, self.B, cfg)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_pmul_matches_multiply(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        old = pmul(self.A, self.A + 1.0, cfg)
+        new = multiply(self.A, self.A + 1.0, cfg)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_pstore_pdiv_match_engine(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        np.testing.assert_array_equal(
+            np.asarray(pstore(self.A, cfg)), np.asarray(store(self.A, cfg))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pdiv(self.A, self.A + 2.0, cfg)),
+            np.asarray(divide(self.A, self.A + 2.0, cfg)),
+        )
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_rr_operand_matches_prepare_operand(self, mode):
+        cfg = PrecisionConfig(mode=mode, fmt=FMT)
+        xo, ko = rr_operand(self.A, cfg)
+        xn, kn = prepare_operand(self.A, cfg)
+        np.testing.assert_array_equal(np.asarray(xo), np.asarray(xn))
+        assert (ko is None) == (kn is None)
+
+    def test_known_mode_semantics_preserved(self):
+        """Engines reproduce the documented per-mode arithmetic — guards the
+        migration itself, not just shim wiring."""
+        a, b = self.A, self.B
+        np.testing.assert_array_equal(
+            np.asarray(contract("md,df->mf", a, b, PRESETS["f32"])),
+            np.asarray(jnp.einsum("md,df->mf", a, b)),
+        )
+        bq = lambda x: jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(contract("md,df->mf", a, b, PRESETS["bf16"])),
+            np.asarray(
+                jnp.einsum("md,df->mf", bq(a), bq(b), preferred_element_type=jnp.float32)
+            ),
+        )
+        e, m = PRESETS["e5m10"].fixed_em
+        np.testing.assert_array_equal(
+            np.asarray(contract("md,df->mf", a, b, PRESETS["e5m10"])),
+            np.asarray(jnp.einsum("md,df->mf", quantize_em(a, e, m), quantize_em(b, e, m))),
+        )
+
+    def test_ste_gradient_preserved(self):
+        """Emulated contractions stay trainable (straight-through grads)."""
+        cfg = PRESETS["r2f2_16"]
+        w = jnp.asarray(_data((16, 8), 12))
+
+        def loss(w):
+            return jnp.sum(contract("md,df->mf", jnp.asarray(self.A[:, :16]), w, cfg) ** 2)
+
+        g = jax.grad(loss)(w)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).sum()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack storage round-trip (hypothesis-free property sweep)
+# ---------------------------------------------------------------------------
+
+
+class TestPackRoundTrip:
+    @pytest.mark.parametrize("k", [0, 1, 2, 3])
+    def test_roundtrip_all_k(self, k):
+        """Any quantize_em output must survive the Fig. 4a storage layout
+        bit-exactly, for every flexible split of <3,9,3>."""
+        e_bits, m_bits = FMT.em(k)
+        rng = np.random.default_rng(100 + k)
+        x = np.concatenate(
+            [
+                (rng.normal(0, 1, 4096) * 10.0 ** rng.integers(-8, 8, 4096)),
+                [0.0, -0.0, np.inf, -np.inf, 1e-30, -1e-30, 65504.0, 1.84e19],
+            ]
+        ).astype(np.float32)
+        xq = np.asarray(quantize_em(x, e_bits, m_bits))
+        payload = np.asarray(pack_r2f2(xq, FMT, k))
+        assert int(payload.max()) < (1 << FMT.total_bits)  # fits the 16-bit word
+        back = np.asarray(unpack_r2f2(payload, FMT, k))
+        np.testing.assert_array_equal(back, xq)
+        # signed zero survives the trip
+        assert np.signbit(back[np.signbit(xq) & (xq == 0)]).all()
+
+    def test_roundtrip_per_element_k(self):
+        """k may vary per element (per-tile metadata)."""
+        rng = np.random.default_rng(200)
+        x = (rng.normal(0, 1, 1024) * 10.0 ** rng.integers(-6, 6, 1024)).astype(np.float32)
+        k = rng.integers(0, FMT.fx + 1, 1024).astype(np.int32)
+        xq = np.asarray(quantize_em(x, FMT.eb + k, FMT.mb + FMT.fx - k))
+        back = np.asarray(unpack_r2f2(pack_r2f2(xq, FMT, k), FMT, k))
+        np.testing.assert_array_equal(back, xq)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel dispatch (ISSUE 1 acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+class TestKernelDispatch:
+    def _spy(self, monkeypatch):
+        from repro.kernels import ops as kernel_ops
+
+        calls = []
+        real = kernel_ops.r2f2_matmul
+
+        def spy(*args, **kw):
+            calls.append((args, kw))
+            return real(*args, **kw)
+
+        monkeypatch.setattr(kernel_ops, "r2f2_matmul", spy)
+        return calls
+
+    def test_rr_einsum_reaches_pallas_kernel(self, monkeypatch):
+        """rr_einsum + PRESETS['r2f2_16'] + use_kernels on a 256x256
+        block-divisible matmul must hit kernels.ops.r2f2_matmul."""
+        calls = self._spy(monkeypatch)
+        cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
+        a, b = _data((256, 256), 20), _data((256, 256), 21)
+        out = rr_einsum("mk,kn->mn", a, b, cfg)
+        assert len(calls) == 1, "policy did not select the Pallas fast path"
+        assert out.shape == (256, 256)
+        # and the policy path returns exactly what the kernel returns
+        from repro.kernels import ops as kernel_ops
+
+        direct = kernel_ops.r2f2_matmul(a, b, cfg.fmt, tail_approx=cfg.tail_approx)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(direct))
+
+    def test_dot_reaches_kernel_too(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
+        dot(_data((128, 128), 22), _data((128, 128), 23), cfg)
+        assert len(calls) == 1
+
+    def test_no_dispatch_without_knob(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        rr_einsum("mk,kn->mn", _data((256, 256), 24), _data((256, 256), 25), PRESETS["r2f2_16"])
+        assert calls == []
+
+    def test_no_dispatch_on_ineligible_shapes_or_specs(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
+        # not divisible by the 128 block
+        rr_einsum("mk,kn->mn", _data((192, 192), 26), _data((192, 192), 27), cfg)
+        # not a 2-D row-by-column contraction
+        rr_einsum("bmk,kn->bmn", _data((2, 128, 128), 28), _data((128, 128), 29), cfg)
+        rr_einsum("mk,nk->mn", _data((128, 128), 30), _data((128, 128), 31), cfg)
+        assert calls == []
+
+    def test_no_dispatch_for_non_rr_engines(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        for preset in ("f32", "bf16", "e5m10", "deploy"):
+            cfg = dataclasses.replace(PRESETS[preset], use_kernels=True)
+            rr_einsum("mk,kn->mn", _data((256, 256), 32), _data((256, 256), 33), cfg)
+        assert calls == []
+
+    def test_kernel_path_close_to_emulation(self):
+        """Fast path and jnp emulation agree to rr-16 tolerance (they differ
+        only in k granularity: per block pair vs per operand tile)."""
+        cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
+        a, b = _data((256, 256), 34), _data((256, 256), 35, scale=0.05)
+        fast = np.asarray(rr_einsum("mk,kn->mn", a, b, cfg))
+        slow = np.asarray(rr_einsum("mk,kn->mn", a, b, PRESETS["r2f2_16"]))
+        rel = np.linalg.norm(fast - slow) / np.linalg.norm(slow)
+        assert rel < 2e-3
