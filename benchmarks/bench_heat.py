@@ -6,45 +6,31 @@ Claims reproduced:
   * 16-bit R2F2 <3,9,3> and 15-bit <3,8,3> match single precision;
   * the precision adjustment unit fires rarely (paper: 5 overflow /
     23 redundancy adjustments over 1.5M multiplications).
+
+The precision-ladder table itself runs on the generic per-stepper harness
+(``benchmarks.bench_pde.run_case``); this module keeps the figure-faithful
+sin/exp scenario pair plus the §5.3 sequential-multiplier counters.
 """
 
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.bench_pde import Scenario, run_case
 from repro.core import FlexFormat, r2f2_mul_sequential
 from repro.precision import PRESETS
-from repro.pde import HeatConfig, simulate_heat
+from repro.pde import HeatConfig
 
 CASES = [("sin", 4000), ("exp", 24000)]
-PRECS = ["e5m10", "r2f2_16", "r2f2_15", "r2f2_14", "bf16"]
+PRECS = ("e5m10", "r2f2_16", "r2f2_15", "r2f2_14", "bf16")
 
 
 def run():
     rows = []
     for init, steps in CASES:
         cfg = HeatConfig(nx=128, init=init)
-        ref, _ = simulate_heat(cfg, PRESETS["f32"], steps)
-        ref = np.asarray(ref)
-        for name in PRECS:
-            t0 = time.perf_counter()
-            out, _ = simulate_heat(cfg, PRESETS[name], steps)
-            out = np.asarray(out)
-            dt_us = (time.perf_counter() - t0) * 1e6 / steps
-            err = float(np.linalg.norm(out - ref) / np.linalg.norm(ref))
-            rows.append(
-                dict(
-                    case=f"heat_{init}",
-                    prec=name,
-                    us_per_step=dt_us,
-                    rel_l2=err,
-                    finite=bool(np.isfinite(out).all()),
-                    correct=err < 0.1,
-                )
-            )
+        sc = Scenario(cfg, steps, precs=PRECS, label=f"heat_{init}")
+        rows += run_case("heat1d", sc)
     return rows
 
 
@@ -54,7 +40,6 @@ def adjustment_counts(n_muls: int = 200_000):
     cfg = HeatConfig(nx=128, init="sin")
     steps = n_muls // (cfg.nx - 2)
     # regenerate the (alpha, lap) operand stream from the f32 trajectory
-    u, _ = simulate_heat(cfg, PRESETS["f32"], 0)
     from repro.pde.heat1d import heat_step, initial_condition
 
     u = initial_condition(cfg)
@@ -73,10 +58,11 @@ def adjustment_counts(n_muls: int = 200_000):
 def main():
     print("# paper Figs. 1 & 7 — heat equation: E5M10 fails, R2F2<=16b matches f32")
     for r in run():
+        # historical row format, so BENCH_heat.json stays comparable
         status = "CORRECT" if r["correct"] else ("NaN" if not r["finite"] else "WRONG")
         print(
             f"heat/{r['case']}/{r['prec']},{r['us_per_step']:.1f},"
-            f"rel_l2={r['rel_l2']:.4f};{status}"
+            f"rel_l2={r['rel']:.4f};{status}"
         )
     n, ovf, red = adjustment_counts()
     print(f"# paper §5.3: 5 overflow / 23 redundancy adjustments in 1.5M muls")

@@ -1,0 +1,129 @@
+"""Generic per-stepper PDE benchmark — every registered solver workload
+through the same precision ladder.
+
+One scenario per registered stepper (``repro.pde.known_steppers``): run the
+f32 reference, then each precision in the ladder, and report per-step time
+plus the paper's correctness verdict (relative L2 for decaying fields, field
+correlation for the SWE basin, exactly as the per-workload benches judged).
+``main`` fails loudly if a registered stepper has no scenario, so adding a
+workload without benchmarking it is impossible.
+
+CSV rows: ``pde/<case>/<prec>,us_per_step,rel=..;corr=..;STATUS`` — captured
+by ``benchmarks.run`` into ``BENCH_pde.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.precision import PRESETS
+from repro.pde import Simulation, get_stepper, known_steppers
+
+DEFAULT_PRECS = ("e5m10", "r2f2_16", "r2f2_15", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One benchmarked configuration of a registered stepper."""
+
+    cfg: Any
+    steps: int
+    precs: Tuple[str, ...] = DEFAULT_PRECS
+    judge: str = "rel"  # "rel": rel_l2 < 0.1 | "corr": field corr > 0.98
+    offset: float = 0.0  # constant background removed before the metrics
+    label: Optional[str] = None
+
+
+def scenarios():
+    """Scenario table, keyed by stepper name (configs/* are the source of
+    figure-faithful shapes/steps)."""
+    from repro.configs import advection1d, burgers1d, heat1d, heat2d, swe2d
+
+    return {
+        "heat1d": Scenario(heat1d.CONFIG, heat1d.BENCH_STEPS["sin"]),
+        "heat2d": Scenario(heat2d.CONFIG, heat2d.BENCH_STEPS),
+        "advection1d": Scenario(advection1d.CONFIG, advection1d.BENCH_STEPS),
+        "burgers1d": Scenario(burgers1d.CONFIG, burgers1d.BENCH_STEPS),
+        "swe2d": Scenario(
+            swe2d.CONFIG,
+            swe2d.BENCH_STEPS,
+            precs=("e5m10", "r2f2_16", "r2f2_16_384", "bf16"),
+            judge="corr",
+            offset=swe2d.CONFIG.depth,
+        ),
+    }
+
+
+def observe(stepper, cfg, state, offset: float = 0.0):
+    """A run's observable as a metrics-ready array (background removed)."""
+    return np.asarray(stepper.observables(state, cfg)) - offset
+
+
+def measure(out, ref, judge: str = "rel"):
+    """The suite's single verdict logic: finite / rel L2 / corr / correct.
+
+    Shared with examples/pde_zoo.py so the zoo's printout and
+    BENCH_pde.json can never disagree about a workload.
+    """
+    finite = bool(np.isfinite(out).all())
+    if finite:
+        rel = float(np.linalg.norm(out - ref) / np.linalg.norm(ref))
+        corr = float(np.corrcoef(out.reshape(-1), ref.reshape(-1))[0, 1])
+    else:
+        rel, corr = float("nan"), float("nan")
+    ok = finite and (corr > 0.98 if judge == "corr" else rel < 0.1)
+    return dict(rel=rel, corr=corr, finite=finite, correct=ok)
+
+
+def run_case(name: str, sc: Scenario):
+    """f32 reference + precision ladder for one scenario -> row dicts."""
+    stepper = get_stepper(name)
+    cfg = sc.cfg
+    ref = observe(
+        stepper, cfg, Simulation(name, cfg, PRESETS["f32"]).run(sc.steps).state, sc.offset
+    )
+    rows = []
+    for prec in sc.precs:
+        t0 = time.perf_counter()
+        out = observe(
+            stepper, cfg, Simulation(name, cfg, PRESETS[prec]).run(sc.steps).state, sc.offset
+        )
+        us = (time.perf_counter() - t0) * 1e6 / sc.steps
+        rows.append(
+            dict(case=sc.label or name, prec=prec, us_per_step=us, **measure(out, ref, sc.judge))
+        )
+    return rows
+
+
+def format_row(r, suite: str = "pde") -> str:
+    status = (
+        "DESTROYED(NaN)"
+        if not r["finite"]
+        else ("CORRECT" if r["correct"] else "WRONG")
+    )
+    return (
+        f"{suite}/{r['case']}/{r['prec']},{r['us_per_step']:.1f},"
+        f"rel={r['rel']:.4f};corr={r['corr']:.4f};{status}"
+    )
+
+
+def main():
+    table = scenarios()
+    missing = [s for s in known_steppers() if s not in table]
+    if missing:
+        raise SystemExit(f"steppers without a bench scenario: {missing}")
+    print("# per-stepper precision ladder: E5M10 fails its way, R2F2-16 matches f32")
+    for name in known_steppers():
+        sc = table[name]
+        st = get_stepper(name)
+        print(f"# {name} [{st.failure_mode}] {st.story}")
+        for r in run_case(name, sc):
+            print(format_row(r))
+
+
+if __name__ == "__main__":
+    main()

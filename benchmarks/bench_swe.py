@@ -6,41 +6,25 @@ equation run on the low-precision multiplier. With a realistic basin
 simulation is destroyed, while R2F2 widens its exponent at runtime and
 tracks the f32 reference (field correlation ~ visual identity in the
 paper's plots). Adjustment counters reported per §5.3.
+
+The precision-ladder table runs on the generic per-stepper harness
+(``benchmarks.bench_pde.run_case``); this module keeps the Fig. 8 scenario
+plus the §5.3 sequential-multiplier counters.
 """
 
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.bench_pde import run_case, scenarios
 from repro.core import FlexFormat, r2f2_mul_sequential
 from repro.precision import PRESETS
 from repro.pde import SWEConfig, simulate_swe
 
-PRECS = ["e5m10", "r2f2_16", "r2f2_16_384", "bf16"]
-STEPS = 400
-
-
 def run():
-    cfg = SWEConfig()
-    ref, _ = simulate_swe(cfg, PRESETS["f32"], STEPS)
-    wref = np.asarray(ref[0]) - cfg.depth
-    rows = []
-    for name in PRECS:
-        t0 = time.perf_counter()
-        out, _ = simulate_swe(cfg, PRESETS[name], STEPS)
-        dt_us = (time.perf_counter() - t0) * 1e6 / STEPS
-        wout = np.asarray(out[0]) - cfg.depth
-        finite = bool(np.isfinite(wout).all())
-        if finite:
-            rel = float(np.linalg.norm(wout - wref) / np.linalg.norm(wref))
-            corr = float(np.corrcoef(wout.reshape(-1), wref.reshape(-1))[0, 1])
-        else:
-            rel, corr = float("nan"), float("nan")
-        rows.append(dict(prec=name, us_per_step=dt_us, rel=rel, corr=corr, finite=finite))
-    return rows
+    # the one scenario definition lives in bench_pde.scenarios(), so this
+    # figure bench and BENCH_pde.json always report the same configuration
+    return run_case("swe2d", scenarios()["swe2d"])
 
 
 def adjustment_counts():
@@ -56,6 +40,10 @@ def adjustment_counts():
 def main():
     print("# paper Fig. 8 — SWE: E5M10 destroys the simulation, R2F2 tracks f32")
     for r in run():
+        # keep the historical row names/verdicts (swe/<prec>, DEGRADED for
+        # finite-but-off) so BENCH_swe.json rows stay keyed consistently;
+        # us_per_step now includes host materialization like every other
+        # suite (the pre-refactor swe bench stopped the clock earlier)
         status = (
             "DESTROYED(NaN)"
             if not r["finite"]

@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,kernels,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,pde,kernels,roofline]
                                             [--json-dir artifacts/bench]
 
 Most benches print ``name,us_per_call,derived`` CSV lines; the harness
@@ -21,7 +21,7 @@ import json
 import os
 import time
 
-SUITES = ("mul", "exploration", "heat", "swe", "kernels", "roofline")
+SUITES = ("mul", "exploration", "heat", "swe", "pde", "kernels", "roofline")
 
 
 def _run_suite(name: str) -> str:
@@ -34,6 +34,8 @@ def _run_suite(name: str) -> str:
         from benchmarks import bench_heat as mod
     elif name == "swe":
         from benchmarks import bench_swe as mod
+    elif name == "pde":
+        from benchmarks import bench_pde as mod
     elif name == "kernels":
         from benchmarks import bench_kernels as mod
     elif name == "roofline":

@@ -1,0 +1,88 @@
+"""The registered PDE scenario zoo, one precision ladder each.
+
+    PYTHONPATH=src python examples/pde_zoo.py [--steppers a,b] [--ensemble N]
+
+Drives every workload through the shared ``repro.pde.solver.Simulation``
+(no per-workload code): f32 reference, the failing E5M10 baseline, 16-bit
+R2F2, and a *tracked* R2F2 run whose final per-site splits are printed —
+the paper's precision-adjust unit carried across the whole simulation.
+Scenario shapes/steps/metric offsets come from the same table the benchmark
+suite uses (``benchmarks.bench_pde.scenarios``), so the zoo and
+``BENCH_pde.json`` can never disagree about a workload. With
+``--ensemble N``, each scenario also runs a vmapped N-member ensemble of
+scaled initial conditions (add a sharding mesh via dist.sharding to spread
+it over devices).
+"""
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+import numpy as np
+
+# examples/ are run as scripts; the bench scenario table lives in the
+# repo-root `benchmarks` package
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.bench_pde import Scenario, measure, observe, scenarios  # noqa: E402
+
+from repro.precision import PRESETS  # noqa: E402
+from repro.pde import Simulation, get_stepper, known_steppers  # noqa: E402
+
+TRACKED = dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steppers", default=None, help="comma-separated subset")
+    ap.add_argument("--ensemble", type=int, default=0, help="vmapped ensemble size")
+    args = ap.parse_args()
+    names = args.steppers.split(",") if args.steppers else known_steppers()
+    table = scenarios()
+
+    for name in names:
+        stepper = get_stepper(name)
+        # steppers registered outside the bench table still run, on defaults
+        sc = table.get(name) or Scenario(cfg=stepper.default_config(), steps=400)
+        print(f"\n=== {name} [{stepper.failure_mode}] — {stepper.story}")
+        ref = None
+        for prec_name, prec in (
+            ("f32", PRESETS["f32"]),
+            ("e5m10", PRESETS["e5m10"]),
+            ("r2f2_16", PRESETS["r2f2_16"]),
+            ("rr_tracked", TRACKED),
+        ):
+            sim = Simulation(name, sc.cfg, prec)
+            res = sim.run(sc.steps)
+            obs = observe(stepper, sim.cfg, res.state, sc.offset)
+            if ref is None:
+                ref = obs
+                print(f"  {prec_name:11s} reference |max|={np.abs(ref).max():.4g}")
+                continue
+            m = measure(obs, ref, sc.judge)
+            if not m["finite"]:
+                print(f"  {prec_name:11s} DESTROYED (NaN/inf)")
+                continue
+            verdict = "" if m["correct"] else "  [WRONG]"
+            line = f"  {prec_name:11s} rel L2 {m['rel']:.5f}"
+            if sc.judge == "corr":  # show the number the verdict judges
+                line += f" corr {m['corr']:.4f}"
+            line += verdict
+            if res.tracker is not None:
+                ks = {n: int(res.tracker.k(n)) for n in res.tracker.names}
+                line += f"   final splits {ks}"
+            print(line)
+
+        if args.ensemble:
+            sim = Simulation(name, sc.cfg, PRESETS["r2f2_16"])
+            u0 = sim.stepper.init_state(sim.cfg)
+            scales = np.linspace(0.5, 1.5, args.ensemble, dtype=np.float32)
+            u0b = scales.reshape((-1,) + (1,) * u0.ndim) * np.asarray(u0)[None]
+            ens = sim.run_ensemble(u0b, max(1, sc.steps // 4))
+            print(f"  ensemble[{args.ensemble}] state {ens.state.shape} "
+                  f"finite={bool(np.isfinite(np.asarray(ens.state)).all())}")
+
+
+if __name__ == "__main__":
+    main()

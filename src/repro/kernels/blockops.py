@@ -1,0 +1,39 @@
+"""Shared per-block R2F2 primitives for Pallas kernel bodies.
+
+Every stencil kernel needs the same in-VMEM building block: a shared-split
+R2F2 product of two blocks (the paper's same-format rule, §4.1 — one runtime
+``k`` per block pair, covering both operands and the product bound). It used
+to be copy-pasted verbatim into each kernel module; it lives here once now,
+and any new stencil kernel composes it.
+
+Pure ``jnp`` on purpose: inside a ``pallas_call`` the ops trace onto VMEM
+block refs; outside they run as plain XLA — which is what the bit-parity
+tests rely on. The oracles in :mod:`repro.kernels.ref` deliberately do NOT
+import this module: they re-derive the same math independently so a bug
+here cannot hide from the kernel-vs-oracle tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.flexformat import quantize_em, unbiased_exponent
+from repro.core.r2f2 import product_guard_bits, select_k
+
+__all__ = ["block_max_exp", "rr_mul_block"]
+
+
+def block_max_exp(t):
+    """Max unbiased exponent over one VMEM block (finite values only)."""
+    mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
+    return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+
+
+def rr_mul_block(a, b, fmt, tail_approx):
+    """Shared-split R2F2 product of two blocks (same-format rule, §4.1)."""
+    k = select_k(block_max_exp(a), block_max_exp(b), fmt)
+    e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
+    aq = quantize_em(a, e_b, m_b)
+    bq = quantize_em(b, e_b, m_b)
+    guard = product_guard_bits(fmt, k) if tail_approx else None
+    return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)

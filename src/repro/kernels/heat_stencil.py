@@ -22,23 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flexformat import quantize_em, unbiased_exponent
-from repro.core.r2f2 import product_guard_bits, select_k
-
-
-def _r2f2_mul_block(a, b, fmt, tail_approx):
-    """Shared-split R2F2 product of two blocks (same-format rule, §4.1)."""
-
-    def tile_max_exp(t):
-        mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
-        return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
-
-    k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
-    e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
-    aq = quantize_em(a, e_b, m_b)
-    bq = quantize_em(b, e_b, m_b)
-    guard = product_guard_bits(fmt, k) if tail_approx else None
-    return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)
+from repro.kernels.blockops import rr_mul_block
 
 
 def _heat_kernel(u_ref, c_ref, o_ref, *, fmt, steps, tail_approx):
@@ -51,8 +35,8 @@ def _heat_kernel(u_ref, c_ref, o_ref, *, fmt, steps, tail_approx):
         # interior laplacian only (boundary columns are Dirichlet-pinned and
         # must not contaminate the per-block range statistics)
         lap = u[:, :-2] - 2.0 * u[:, 1:-1] + u[:, 2:]  # adds in f32
-        flux = _r2f2_mul_block(jnp.broadcast_to(alpha, lap.shape), lap, fmt, tail_approx)
-        upd = _r2f2_mul_block(flux, jnp.broadcast_to(dtodx2, lap.shape), fmt, tail_approx)
+        flux = rr_mul_block(jnp.broadcast_to(alpha, lap.shape), lap, fmt, tail_approx)
+        upd = rr_mul_block(flux, jnp.broadcast_to(dtodx2, lap.shape), fmt, tail_approx)
         interior = u[:, 1:-1] + upd
         return jnp.concatenate([u[:, :1], interior, u[:, -1:]], axis=1)
 

@@ -19,33 +19,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.flexformat import quantize_em, unbiased_exponent
-from repro.core.r2f2 import product_guard_bits, select_k
+from repro.kernels.blockops import rr_mul_block
 
 G_GRAV = 9.81
 DEFAULT_BLOCK = (64, 128)
 
 
-def _rr_mul_block(a, b, fmt, tail_approx):
-    def tile_max_exp(t):
-        mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
-        return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
-
-    k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
-    e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
-    aq = quantize_em(a, e_b, m_b)
-    bq = quantize_em(b, e_b, m_b)
-    guard = product_guard_bits(fmt, k) if tail_approx else None
-    return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)
-
-
 def _swe_flux_kernel(q1_ref, q3_ref, o_ref, *, fmt, tail_approx):
     q1 = q1_ref[...]
     q3 = q3_ref[...]
-    t1 = _rr_mul_block(q1, q1, fmt, tail_approx)  # multiplier 1
+    t1 = rr_mul_block(q1, q1, fmt, tail_approx)  # multiplier 1
     t2 = t1 / q3  # f32 divider (R2F2 is a multiplier)
-    t3 = _rr_mul_block(q3, q3, fmt, tail_approx)  # multiplier 2
-    t4 = _rr_mul_block(jnp.full_like(t3, 0.5 * G_GRAV), t3, fmt, tail_approx)  # mult 3
+    t3 = rr_mul_block(q3, q3, fmt, tail_approx)  # multiplier 2
+    t4 = rr_mul_block(jnp.full_like(t3, 0.5 * G_GRAV), t3, fmt, tail_approx)  # mult 3
     o_ref[...] = t2 + t4
 
 

@@ -1,0 +1,78 @@
+"""1D linear advection, flux-form upwind — beyond-paper workload #2.
+
+    du/dt + c * du/dx = 0,    u'[i] = u[i] - (dt/dx) * (f[i] - f[i-1])
+
+with the flux ``f = c * u`` on the policy's multiplier (periodic domain,
+``c > 0``). At ``cfl = c*dt/dx = 1`` the upwind scheme is *exact*: each step
+translates the profile by one cell, so the f32 run is a bit-for-bit
+translation oracle — any deviation is pure multiplier rounding, the cleanest
+per-step error meter in the suite.
+
+Precision story (*overflow*): the flux operand is the field itself, and the
+default pulse peaks at 1e5 — past E5M10's 65504 ceiling, so the fixed-format
+flux quantizes to inf, the flux difference becomes NaN, and the simulation
+is destroyed within a step, while R2F2 widens the exponent (k -> FX) and
+rides through with ~10-bit mantissa rounding only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .registry import register_stepper
+from .solver import StepOps, Stepper
+
+__all__ = ["AdvectionConfig", "Advection1DStepper", "initial_profile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdvectionConfig:
+    nx: int = 256
+    length: float = 1.0
+    speed: float = 1.0  # c > 0 (upwind bias is to the left neighbour)
+    cfl: float = 1.0  # c*dt/dx; 1.0 -> exact translation per step
+    amplitude: float = 1.0e5  # peaks past E5M10's 65504 ceiling
+    width: float = 0.08  # gaussian pulse width (fraction of the domain)
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.nx
+
+    @property
+    def dt(self) -> float:
+        return self.cfl * self.dx / self.speed
+
+    @property
+    def dtodx(self) -> float:
+        return self.dt / self.dx
+
+
+def initial_profile(cfg: AdvectionConfig) -> jnp.ndarray:
+    x = jnp.linspace(0.0, cfg.length, cfg.nx, endpoint=False, dtype=jnp.float32)
+    return cfg.amplitude * jnp.exp(
+        -(((x - 0.3 * cfg.length) / (cfg.width * cfg.length)) ** 2)
+    )
+
+
+@register_stepper("advection1d")
+class Advection1DStepper(Stepper):
+    """Flux-form first-order upwind on a periodic domain."""
+
+    sites = ("adv.flux", "adv.update")
+    failure_mode = "overflow"
+    story = "flux operand is the 1e5-peak field itself; E5M10 infs the flux"
+    snapshots_default = 8
+
+    def default_config(self) -> AdvectionConfig:
+        return AdvectionConfig()
+
+    def init_state(self, cfg: AdvectionConfig) -> jnp.ndarray:
+        return initial_profile(cfg)
+
+    def step(self, u, cfg: AdvectionConfig, ops: StepOps):
+        f = ops.mul(jnp.float32(cfg.speed), u, "adv.flux")  # multiplier 1
+        df = f - jnp.roll(f, 1)  # upwind difference, adds in f32
+        upd = ops.mul(jnp.float32(cfg.dtodx), df, "adv.update")  # multiplier 2
+        return u - upd

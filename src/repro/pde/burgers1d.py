@@ -1,0 +1,75 @@
+"""1D inviscid Burgers equation, Lax-Friedrichs — beyond-paper workload #3.
+
+    du/dt + d(u^2/2)/dx = 0
+
+The flux is the *nonlinear* product ``u * u`` on the policy's multiplier —
+the operand range squares, and it *drifts*: a 350-amplitude sin wave needs
+the full flexible split (u^2 ~ 1.2e5 overflows E5M10 outright), then the
+shock forms at t* = L/(2*pi*A) and Lax-Friedrichs dissipation decays the
+N-wave like ~1/t, dropping the product range by orders of magnitude. A
+stateless per-step format choice handles each step; what this workload
+stresses is the *tracked* path (``rr_tracked`` / ``deploy``): the carried
+split must grow to FX at the start and shrink back as the range collapses —
+the paper's §4.2 redundancy rule exercised across thousands of steps, which
+is exactly the regression the solver framework's tracker threading exists
+for.
+
+Periodic domain; fixed ``dt = cfl * dx / amplitude`` (max|u| only decays, so
+the CFL bound holds for the whole run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .registry import register_stepper
+from .solver import StepOps, Stepper
+
+__all__ = ["BurgersConfig", "Burgers1DStepper", "initial_wave"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BurgersConfig:
+    nx: int = 256
+    length: float = 1.0
+    amplitude: float = 350.0  # u*u ~ 1.2e5 overflows E5M10's 65504
+    cfl: float = 0.4  # dt = cfl*dx/amplitude (max|u| never grows)
+    modes: int = 1  # sin harmonics
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.nx
+
+    @property
+    def dt(self) -> float:
+        return self.cfl * self.dx / self.amplitude
+
+
+def initial_wave(cfg: BurgersConfig) -> jnp.ndarray:
+    x = jnp.linspace(0.0, cfg.length, cfg.nx, endpoint=False, dtype=jnp.float32)
+    return cfg.amplitude * jnp.sin(2.0 * cfg.modes * jnp.pi * x / cfg.length)
+
+
+@register_stepper("burgers1d")
+class Burgers1DStepper(Stepper):
+    """Conservative Lax-Friedrichs update on a periodic domain."""
+
+    sites = ("burgers.uu", "burgers.flux")
+    failure_mode = "nonlinear-drift"
+    story = "u*u squares the range, overflows E5M10, then decays ~1/t post-shock"
+    snapshots_default = 8
+
+    def default_config(self) -> BurgersConfig:
+        return BurgersConfig()
+
+    def init_state(self, cfg: BurgersConfig) -> jnp.ndarray:
+        return initial_wave(cfg)
+
+    def step(self, u, cfg: BurgersConfig, ops: StepOps):
+        uu = ops.mul(u, u, "burgers.uu")  # the nonlinear flux product
+        f = ops.mul(jnp.float32(0.5), uu, "burgers.flux")  # f = u^2/2
+        u_avg = 0.5 * (jnp.roll(u, -1) + jnp.roll(u, 1))  # LF average, f32 adds
+        df = jnp.roll(f, -1) - jnp.roll(f, 1)
+        return u_avg - (cfg.dt / (2.0 * cfg.dx)) * df

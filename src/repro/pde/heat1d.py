@@ -15,6 +15,10 @@ values beyond 65504).
 
 Solver state is stored in the policy's format every step (16-bit storage in
 the paper's system); additions run in f32 (the FPU adder).
+
+The workload is a thin :class:`repro.pde.solver.Stepper` registered as
+``"heat1d"``; ``simulate``/``heat_step`` remain as shims with unchanged
+numerics over the shared :class:`~repro.pde.solver.Simulation` driver.
 """
 
 from __future__ import annotations
@@ -22,12 +26,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.precision import PrecisionConfig, multiply
+from repro.precision import PrecisionConfig
 
-__all__ = ["HeatConfig", "initial_condition", "heat_step", "simulate"]
+from .registry import register_stepper
+from .solver import Simulation, StepOps, Stepper
+
+__all__ = ["HeatConfig", "Heat1DStepper", "initial_condition", "heat_step", "simulate"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,18 +72,40 @@ def initial_condition(cfg: HeatConfig) -> jnp.ndarray:
     return u0.at[0].set(0.0).at[-1].set(0.0)
 
 
-def heat_step(u, cfg: HeatConfig, prec: PrecisionConfig):
+@register_stepper("heat1d")
+class Heat1DStepper(Stepper):
     """One explicit-FD step under the precision policy.
 
     State stays f32, exactly like the paper's HLS system: the R2F2 unit
     "reads and converts from single precision ... and converts back" (§5.2)
     around each multiplication; only the multiplies see the low bitwidth.
     """
-    lap = u[:-2] - 2.0 * u[1:-1] + u[2:]  # adds in f32
-    flux = multiply(jnp.float32(cfg.alpha), lap, prec, site="heat.flux")  # multiplier 1
-    upd = multiply(flux, jnp.float32(cfg.dtodx2), prec, site="heat.update")  # multiplier 2
-    interior = u[1:-1] + upd
-    return jnp.concatenate([u[:1], interior, u[-1:]])
+
+    sites = ("heat.flux", "heat.update")
+    failure_mode = "underflow"
+    story = "alpha*lap falls below E5M10's subnormal floor late in the run"
+    snapshots_default = 8
+
+    def default_config(self) -> HeatConfig:
+        return HeatConfig(nx=128)
+
+    def init_state(self, cfg: HeatConfig) -> jnp.ndarray:
+        return initial_condition(cfg)
+
+    def step(self, u, cfg: HeatConfig, ops: StepOps):
+        lap = u[:-2] - 2.0 * u[1:-1] + u[2:]  # adds in f32
+        flux = ops.mul(jnp.float32(cfg.alpha), lap, "heat.flux")  # multiplier 1
+        upd = ops.mul(flux, jnp.float32(cfg.dtodx2), "heat.update")  # multiplier 2
+        interior = u[1:-1] + upd
+        return jnp.concatenate([u[:1], interior, u[-1:]])
+
+
+_STEPPER = Heat1DStepper()
+
+
+def heat_step(u, cfg: HeatConfig, prec: PrecisionConfig):
+    """One explicit-FD step (untracked shim over the registered stepper)."""
+    return _STEPPER.step(u, cfg, StepOps(prec))
 
 
 def simulate(
@@ -88,19 +116,9 @@ def simulate(
     u0: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run ``steps`` updates. Returns (final_state, snapshots)."""
-    u0 = initial_condition(cfg) if u0 is None else jnp.asarray(u0, jnp.float32)
-    every = snapshot_every or max(1, steps // 8)
-
-    def body(u, _):
-        return heat_step(u, cfg, prec), None
-
-    def outer(u, _):
-        u, _ = jax.lax.scan(body, u, None, length=every)
-        return u, u
-
-    n_out = steps // every
-    u_fin, snaps = jax.lax.scan(outer, u0, None, length=n_out)
-    rem = steps - n_out * every
-    if rem:
-        u_fin, _ = jax.lax.scan(body, u_fin, None, length=rem)
-    return u_fin, snaps
+    res = Simulation("heat1d", cfg, prec).run(
+        steps,
+        snapshot_every=snapshot_every,
+        state0=None if u0 is None else jnp.asarray(u0, jnp.float32),
+    )
+    return res.state, res.snapshots

@@ -1,0 +1,114 @@
+"""2D heat equation, explicit finite differences — beyond-paper workload #1.
+
+    du/dt = alpha * (d2u/dx2 + d2u/dy2)
+
+Same two-multiplier decomposition as the paper's 1D case (``flux = alpha *
+lap`` then ``upd = flux * dtodx2``) and the same *underflow* failure mode:
+with a physical diffusivity the flux products sink below E5M10's subnormal
+floor as the solution decays, freezing the dynamics. What the second
+dimension adds is range *locality at tile granularity*: a 2D field hands the
+rr engines genuinely two-dimensional quantization tiles (the paper's "local
+clusters" argument, exercised at (tile, tile) blocks instead of 1D rows),
+and the Pallas kernels their natural (8, 128)-aligned layout.
+
+Square cells: ``dy == dx == length / nx`` (``ny`` sets the y extent), so the
+update needs exactly one ``dt/dx^2`` multiplier, like the 1D solver.
+Boundaries are Dirichlet (pinned to zero).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .registry import register_stepper
+from .solver import StepOps, Stepper
+
+__all__ = ["Heat2DConfig", "Heat2DStepper", "initial_condition_2d"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Heat2DConfig:
+    nx: int = 64
+    ny: int = 64
+    length: float = 1.0  # x extent; cells are square, so y extent = ny * dx
+    alpha: float = 1e-5  # physical diffusivity (steel ~ 1.2e-5 m^2/s)
+    cfl: float = 0.2  # r = alpha*dt/dx^2; 2D explicit stability needs r <= 1/4
+    init: str = "sin"  # "sin" | "exp"
+    amplitude: float = 500.0
+    modes: tuple = (3, 2)  # (x, y) sin harmonics
+
+    @property
+    def dx(self) -> float:
+        return self.length / self.nx
+
+    @property
+    def length_y(self) -> float:
+        return self.ny * self.dx
+
+    @property
+    def dt(self) -> float:
+        return self.cfl * self.dx * self.dx / self.alpha
+
+    @property
+    def dtodx2(self) -> float:
+        return self.dt / (self.dx * self.dx)
+
+    @property
+    def decay_rate(self) -> float:
+        """Analytic decay rate of the configured sin mode (for tests)."""
+        import math
+
+        mx, my = self.modes
+        return self.alpha * (
+            (mx * math.pi / self.length) ** 2 + (my * math.pi / self.length_y) ** 2
+        )
+
+
+def initial_condition_2d(cfg: Heat2DConfig) -> jnp.ndarray:
+    x = jnp.linspace(0.0, cfg.length, cfg.nx, dtype=jnp.float32)
+    y = jnp.linspace(0.0, cfg.length_y, cfg.ny, dtype=jnp.float32)
+    xx, yy = jnp.meshgrid(x, y, indexing="ij")
+    if cfg.init == "sin":
+        mx, my = cfg.modes
+        u0 = cfg.amplitude * (
+            jnp.sin(mx * jnp.pi * xx / cfg.length) * jnp.sin(my * jnp.pi * yy / cfg.length_y)
+        )
+    elif cfg.init == "exp":
+        r2 = ((xx - 0.5 * cfg.length) ** 2 + (yy - 0.5 * cfg.length_y) ** 2) / (
+            0.05 * cfg.length
+        ) ** 2
+        u0 = cfg.amplitude * jnp.exp(-r2)
+    else:
+        raise ValueError(f"unknown init {cfg.init!r}")
+    u0 = u0.at[0, :].set(0.0).at[-1, :].set(0.0)
+    return u0.at[:, 0].set(0.0).at[:, -1].set(0.0)
+
+
+@register_stepper("heat2d")
+class Heat2DStepper(Stepper):
+    """Explicit 5-point stencil with the paper's two-multiplier split."""
+
+    sites = ("heat2d.flux", "heat2d.update")
+    failure_mode = "underflow"
+    story = "2D decay drives alpha*lap below E5M10's floor; 2D locality tiles"
+    snapshots_default = 8
+
+    def default_config(self) -> Heat2DConfig:
+        return Heat2DConfig()
+
+    def init_state(self, cfg: Heat2DConfig) -> jnp.ndarray:
+        return initial_condition_2d(cfg)
+
+    def step(self, u, cfg: Heat2DConfig, ops: StepOps):
+        lap = (  # 5-point interior laplacian, adds in f32
+            u[:-2, 1:-1]
+            + u[2:, 1:-1]
+            + u[1:-1, :-2]
+            + u[1:-1, 2:]
+            - 4.0 * u[1:-1, 1:-1]
+        )
+        flux = ops.mul(jnp.float32(cfg.alpha), lap, "heat2d.flux")  # multiplier 1
+        upd = ops.mul(flux, jnp.float32(cfg.dtodx2), "heat2d.update")  # multiplier 2
+        return u.at[1:-1, 1:-1].add(upd)

@@ -1,0 +1,236 @@
+"""Unified PDE solver framework: Stepper protocol + Simulation driver.
+
+Every PDE workload used to hand-roll its own ``lax.scan`` scaffolding, and
+none threaded a tracker through the loop — so the cross-step ``rr_tracked``
+engine silently degraded to stateless per-tensor selection exactly where the
+paper exercises it. This module owns the simulation loop once:
+
+* a :class:`Stepper` is the workload: ``init_state / step / observables``
+  plus static metadata (named multiplication sites, precision failure mode);
+* :class:`StepOps` is the per-step arithmetic context handed to
+  ``Stepper.step``: ``mul/div/store`` route through the precision engine and
+  thread the tracker implicitly, so stepper code never touches tracker
+  plumbing;
+* :class:`Simulation` drives the scan/snapshot loop, carrying
+  ``(state, tracker)`` through every step — tracked modes (``rr_tracked`` /
+  ``deploy``, any engine with ``tracks=True``) genuinely carry the flexible
+  split ``k`` across time, the paper's precision-adjust-unit persistence;
+* ensembles of initial conditions run vmapped
+  (:meth:`Simulation.run_ensemble`), optionally sharded over the mesh's
+  data axes via :mod:`repro.dist.sharding` logical-axis rules (the ensemble
+  member dim is the logical ``batch`` axis).
+
+Steppers register under a string key (:mod:`repro.pde.registry`, mirroring
+``precision/registry.py``), so benchmarks, examples and docs enumerate
+scenarios instead of importing workload modules. See DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionConfig
+from repro.dist.sharding import constrain
+from repro.precision import get_engine, site_tracker_init
+from repro.pde.registry import get_stepper
+
+__all__ = ["Stepper", "StepOps", "Simulation", "SimResult"]
+
+
+class StepOps:
+    """Per-step policy arithmetic for stepper code.
+
+    Wraps ``(engine, cfg, tracker)`` so a stepper writes
+    ``flux = ops.mul(alpha, lap, "heat.flux")`` and the tracker state —
+    when one is threaded — is updated in place and returned to the scan
+    carry by the driver. With ``tracker=None`` the calls are exactly the
+    engine calls the pre-framework solvers made, so untracked numerics are
+    bit-identical to the old per-workload loops.
+    """
+
+    __slots__ = ("prec", "tracker", "_engine")
+
+    def __init__(self, prec: PrecisionConfig, tracker=None):
+        self.prec = prec
+        self.tracker = tracker
+        self._engine = get_engine(prec)
+
+    def mul(self, a, b, site: str):
+        """Elementwise product on the policy's multiplier at a named site."""
+        out, self.tracker = self._engine.multiply(
+            a, b, self.prec, tracker=self.tracker, site=site
+        )
+        return out
+
+    def div(self, a, b):
+        """Quotient on the substrate divider (R2F2 is a multiplier)."""
+        return self._engine.divide(a, b, self.prec)
+
+    def store(self, x):
+        """Round state to the policy's storage format."""
+        return self._engine.store(x, self.prec)
+
+
+class Stepper:
+    """One PDE workload: state initialisation, one update, what to snapshot.
+
+    Subclasses implement ``init_state`` and ``step`` and declare their named
+    multiplication sites (``sites``) — the rows a tracked run's SiteTracker
+    carries. ``name`` is stamped by ``register_stepper``; ``failure_mode``
+    and ``story`` are documentation metadata surfaced by the README scenario
+    table and the per-stepper benchmark suite.
+    """
+
+    name: str = "?"
+    sites: Tuple[str, ...] = ()
+    #: how this scenario breaks a fixed 16-bit format (README table):
+    #: "underflow" | "overflow" | "nonlinear-drift"
+    failure_mode: str = "?"
+    story: str = ""
+    #: default number of snapshots when ``snapshot_every`` is not given
+    #: (kept per-stepper so the legacy ``simulate`` shims stay bit-identical)
+    snapshots_default: int = 8
+
+    def default_config(self):
+        raise NotImplementedError
+
+    def init_state(self, cfg):
+        """Initial solver state (a pytree of f32 arrays)."""
+        raise NotImplementedError
+
+    def step(self, state, cfg, ops: StepOps):
+        """One update. All policy multiplications go through ``ops.mul``."""
+        raise NotImplementedError
+
+    def observables(self, state, cfg):
+        """What one snapshot records (default: the whole state)."""
+        del cfg
+        return state
+
+
+class SimResult(NamedTuple):
+    """What a run returns; ``tracker`` is None for untracked modes."""
+
+    state: Any  # final solver state
+    snapshots: Any  # stacked observables, leading dim = n snapshots
+    tracker: Optional[Any]  # final SiteTracker (tracked modes)
+
+
+def _constrain_ensemble(tree):
+    """Annotate every leaf's leading (member) dim as the logical batch axis.
+
+    No-op outside a ``dist.sharding.axis_rules`` context, so unsharded
+    ensembles and unit tests run mesh-free.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: constrain(x, "batch", *([None] * (x.ndim - 1))), tree
+    )
+
+
+@dataclasses.dataclass
+class Simulation:
+    """The scan/snapshot scaffolding, owned once for every stepper.
+
+    ``stepper`` may be a registered name or a Stepper instance; ``cfg``
+    defaults to the stepper's ``default_config()``.
+    """
+
+    stepper: Union[str, Stepper]
+    cfg: Any
+    prec: PrecisionConfig
+
+    def __post_init__(self):
+        if isinstance(self.stepper, str):
+            self.stepper = get_stepper(self.stepper)
+        if self.cfg is None:
+            self.cfg = self.stepper.default_config()
+
+    # -- tracker ------------------------------------------------------------
+
+    def init_tracker(self, k0: Optional[int] = None):
+        """Fresh SiteTracker over the stepper's sites (tracked modes only;
+        returns None when the engine does not track or there are no sites)."""
+        if not (get_engine(self.prec).tracks and self.stepper.sites):
+            return None
+        return site_tracker_init(self.stepper.sites, self.prec.fmt, k0=k0)
+
+    # -- single run ---------------------------------------------------------
+
+    def run(
+        self,
+        steps: int,
+        *,
+        snapshot_every: Optional[int] = None,
+        state0=None,
+        tracker=None,
+    ) -> SimResult:
+        """Advance ``steps`` updates, snapshotting observables periodically.
+
+        The scan carry is ``(state, tracker)`` — tracked engines see the
+        tracker every step and their updated state is carried forward, so
+        the flexible split ``k`` genuinely evolves across time. Pass an
+        explicit ``tracker`` to resume from saved adjust-unit state; by
+        default tracked modes start from :meth:`init_tracker`.
+        """
+        stepper, cfg, prec = self.stepper, self.cfg, self.prec
+        state0 = stepper.init_state(cfg) if state0 is None else state0
+        if tracker is None:
+            tracker = self.init_tracker()
+        every = snapshot_every or max(1, steps // stepper.snapshots_default)
+
+        def body(carry, _):
+            state, tr = carry
+            ops = StepOps(prec, tr)
+            state = stepper.step(state, cfg, ops)
+            return (state, ops.tracker), None
+
+        def outer(carry, _):
+            carry, _ = jax.lax.scan(body, carry, None, length=every)
+            return carry, stepper.observables(carry[0], cfg)
+
+        n_out = steps // every
+        carry = (state0, tracker)
+        carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
+        rem = steps - n_out * every
+        if rem:
+            carry, _ = jax.lax.scan(body, carry, None, length=rem)
+        state, tracker = carry
+        return SimResult(state, snaps, tracker)
+
+    # -- ensembles ----------------------------------------------------------
+
+    def run_ensemble(
+        self,
+        state0_batch,
+        steps: int,
+        *,
+        snapshot_every: Optional[int] = None,
+        sharded: bool = False,
+    ) -> SimResult:
+        """Vmapped ensemble over a batch of initial conditions.
+
+        ``state0_batch`` is the stepper's state pytree with a leading member
+        dim on every leaf. Each member carries its own tracker rows (the
+        per-member precision-adjust state the hardware would have). With
+        ``sharded=True`` the member dim is annotated as the logical
+        ``batch`` axis, so inside a ``dist.sharding.axis_rules(mesh)``
+        context the ensemble spreads over the mesh's data axes — the
+        production-scale path for parameter sweeps and uncertainty
+        quantification.
+        """
+        if sharded:
+            state0_batch = _constrain_ensemble(state0_batch)
+
+        def one(s0):
+            return self.run(steps, snapshot_every=snapshot_every, state0=s0)
+
+        res = jax.vmap(one)(state0_batch)
+        if sharded:
+            # every result leaf (state, snapshots, tracker rows) leads with
+            # the member dim — annotate them all so nothing gets replicated
+            res = _constrain_ensemble(res)
+        return res

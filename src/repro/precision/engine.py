@@ -91,6 +91,11 @@ class PrecisionEngine:
 
     name: str = "?"
     emulated: bool = False
+    #: Does this engine consume/update a threaded tracker? Frameworks that own
+    #: a simulation loop (``repro.pde.solver.Simulation``) read this to decide
+    #: whether to auto-initialise a SiteTracker for the workload's named sites
+    #: — without it, tracked modes silently degrade to stateless selection.
+    tracks: bool = False
 
     # -- operand treatment ---------------------------------------------------
 

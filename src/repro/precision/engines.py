@@ -250,18 +250,31 @@ class RRTileEngine(PrecisionEngine):
 
 @register_engine("rr_tracked")
 class RRTrackedEngine(RRTileEngine):
-    """R2F2 emulation with k carried across steps by a (Site)Tracker."""
+    """R2F2 emulation with k carried across steps by a (Site)Tracker.
+
+    The live split is the *tracked* one widened to the instantaneous safe
+    minimum: the paper's Fig. 5 unit detects overflow/underflow DURING a
+    multiplication and retries it at a grown split, so a range spike can
+    never fault the current operation — only *shrinking* below the carried
+    k requires the tracker's cross-step redundancy evidence (EMA), which is
+    exactly the persistence the tracker provides.
+    """
 
     emulated = True
+    tracks = True
+
+    def _k_live(self, state, idx, a, b, cfg):
+        """Carried split, grown on demand (the hardware's overflow-retry)."""
+        return jnp.maximum(tracker_k(state, idx), _shared_k(a, b, cfg))
 
     def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
         del shared_k
         state, idx = resolve_site(tracker, site)
         if state is None or idx is None:
             raise ValueError("rr_tracked needs tracker+site")
-        a = jnp.asarray(a)
-        b = jnp.asarray(b)
-        k = tracker_k(state, idx)
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        k = self._k_live(state, idx, a, b, cfg)
         state = tracker_update(state, idx, a, b, cfg)
         aq, _ = self.prepare_operand(a, cfg, k=k)
         bq, _ = self.prepare_operand(b, cfg, k=k)
@@ -276,7 +289,7 @@ class RRTrackedEngine(RRTileEngine):
             # untracked fallback: stateless per-tensor selection (rr_tile)
             out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
             return out, tracker
-        k = tracker_k(state, idx)
+        k = self._k_live(state, idx, a, b, cfg)
         state = tracker_update(state, idx, a, b, cfg)
         out, _ = r2f2_multiply(a, b, cfg.fmt, k=k, tile_shape=None, tail_approx=cfg.tail_approx)
         return out, rewrap(tracker, state)
@@ -287,6 +300,8 @@ class DeployEngine(BF16Engine):
     """bf16 arithmetic (the MXU-rate proxy for 16-bit flexible operands) +
     tracker-driven k bookkeeping, so dry-run/roofline numbers reflect what
     R2F2 silicon would execute while the format choice stays observable."""
+
+    tracks = True
 
     def _track(self, tracker, site, a, b, cfg):
         state, idx = resolve_site(tracker, site)

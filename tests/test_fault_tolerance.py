@@ -61,6 +61,7 @@ class TestCheckpoint:
 
 
 class TestElastic:
+    @pytest.mark.slow
     def test_restore_on_different_device_count(self, tmp_path):
         """Save in this process (1 device), resume in a child process with 8
         virtual devices on a (8,) data mesh — the mesh-agnostic checkpoint +

@@ -72,7 +72,9 @@ class TestMatmulKernel:
 
 
 class TestHeatKernel:
-    @pytest.mark.parametrize("steps", [1, 10, 100])
+    @pytest.mark.parametrize(
+        "steps", [1, 10, pytest.param(100, marks=pytest.mark.slow)]
+    )
     def test_matches_ref(self, steps):
         u0 = (
             500 * np.sin(np.linspace(0, 3 * np.pi, 512))[None] * np.ones((8, 1))
@@ -93,6 +95,50 @@ class TestHeatKernel:
         k_out = ops.heat_stencil(u0, cfg.alpha, cfg.dtodx2, FMTS[0], steps=50)
         sol, _ = simulate_heat(cfg, PRESETS["r2f2_16"], 50)
         np.testing.assert_array_equal(np.asarray(k_out)[0], np.asarray(sol))
+
+
+class TestBlockOps:
+    """kernels/blockops.py consolidated the per-kernel R2F2 block helpers;
+    the move must be bit-invisible."""
+
+    def test_rr_mul_block_matches_pre_move_helper(self):
+        """Bit-identity against an inline copy of the helper both kernels
+        carried before the consolidation."""
+        from jax import numpy as jnp
+
+        from repro.core.flexformat import quantize_em, unbiased_exponent
+        from repro.core.r2f2 import product_guard_bits, select_k
+        from repro.kernels.blockops import rr_mul_block
+
+        def legacy(a, b, fmt, tail_approx):
+            def tile_max_exp(t):
+                mag = jnp.where(jnp.isfinite(t), jnp.abs(t), 0.0)
+                return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
+
+            k = select_k(tile_max_exp(a), tile_max_exp(b), fmt)
+            e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
+            aq = quantize_em(a, e_b, m_b)
+            bq = quantize_em(b, e_b, m_b)
+            guard = product_guard_bits(fmt, k) if tail_approx else None
+            return quantize_em(aq * bq, e_b, m_b, tail_trunc_bits=guard)
+
+        rng = np.random.default_rng(42)
+        for fmt in FMTS:
+            for tail in (True, False):
+                a = jnp.asarray(_data((64, 128), (-4, 5), seed=rng.integers(1e6)))
+                b = jnp.asarray(_data((64, 128), (-4, 5), seed=rng.integers(1e6)))
+                np.testing.assert_array_equal(
+                    np.asarray(rr_mul_block(a, b, fmt, tail)),
+                    np.asarray(legacy(a, b, fmt, tail)),
+                )
+
+    def test_both_kernels_share_the_helper(self):
+        """The dedup satellite: neither kernel module re-defines a private
+        block-multiply helper anymore."""
+        from repro.kernels import blockops, heat_stencil, swe_flux
+
+        assert heat_stencil.rr_mul_block is blockops.rr_mul_block
+        assert swe_flux.rr_mul_block is blockops.rr_mul_block
 
 
 class TestSWEFluxKernel:

@@ -34,6 +34,7 @@ class TestHeatClaims:
         err = np.linalg.norm(np.asarray(out) - ref) / np.linalg.norm(ref)
         assert err < 0.05
 
+    @pytest.mark.slow
     def test_exp_init_r2f2_beats_half(self):
         cfg = HeatConfig(nx=128, init="exp")
         ref, _ = simulate_heat(cfg, PRESETS["f32"], 4000)

@@ -1,0 +1,117 @@
+"""The new scenario workloads: analytic convergence (2D heat Fourier-mode
+decay, advection exact translation, Burgers conservation) and the paper's
+precision pattern per stepper — E5M10 fails its failure mode, 16-bit R2F2
+matches the f32 reference."""
+
+import numpy as np
+import pytest
+
+from repro.core.policy import PRESETS
+from repro.pde import (
+    AdvectionConfig,
+    BurgersConfig,
+    Heat2DConfig,
+    Simulation,
+    initial_profile,
+    initial_wave,
+)
+
+
+def _final(name, cfg, prec, steps):
+    return np.asarray(Simulation(name, cfg, PRESETS[prec]).run(steps).state)
+
+
+def _rel(out, ref):
+    return np.linalg.norm(out - ref) / np.linalg.norm(ref)
+
+
+class TestHeat2D:
+    def test_fourier_mode_decay_analytic(self):
+        """A single (mx, my) sin mode is an exact eigenvector of the 5-point
+        Laplacian, so it decays geometrically at the discrete eigenvalue —
+        which converges to the continuous exp(-alpha*|k|^2 t) rate."""
+        cfg = Heat2DConfig(nx=64, ny=64, modes=(2, 1), amplitude=1.0)
+        steps = 800
+        out = _final("heat2d", cfg, "f32", steps)
+        x = np.linspace(0, cfg.length, cfg.nx)
+        y = np.linspace(0, cfg.length_y, cfg.ny)
+        xx, yy = np.meshgrid(x, y, indexing="ij")
+        mode = np.sin(2 * np.pi * xx / cfg.length) * np.sin(np.pi * yy / cfg.length_y)
+        # per-step decay factor of the discrete mode (grid spacing is
+        # length/(nx-1): linspace includes both Dirichlet endpoints)
+        g = 1.0 - 4.0 * cfg.cfl * (
+            np.sin(2 * np.pi / (2 * (cfg.nx - 1))) ** 2
+            + np.sin(np.pi / (2 * (cfg.ny - 1))) ** 2
+        )
+        assert _rel(out, g**steps * mode) < 1e-3  # exact eigen-decay, f32 noise
+        # and the discrete rate is the continuous one to O(dx^2)
+        assert abs(-np.log(g) / (cfg.decay_rate * cfg.dt) - 1.0) < 0.05
+
+    @pytest.mark.slow
+    def test_e5m10_fails_r2f2_matches(self):
+        """The 1D paper claim generalises: by 1.5k steps the decayed flux
+        products sit below E5M10's floor (frozen dynamics) while 16-bit
+        R2F2 still tracks f32."""
+        cfg = Heat2DConfig()
+        steps = 1500
+        ref = _final("heat2d", cfg, "f32", steps)
+        half = _final("heat2d", cfg, "e5m10", steps)
+        rr = _final("heat2d", cfg, "r2f2_16", steps)
+        assert _rel(half, ref) > 1.0  # grossly wrong
+        assert _rel(rr, ref) < 0.05
+
+
+class TestAdvection1D:
+    def test_cfl1_upwind_translates_exactly(self):
+        """At cfl=1 the upwind scheme is exact: nx steps translate the
+        profile one full period (to f32 rounding — the update's
+        ``u - (u - u_left)`` cancellation rounds the far gaussian tail)."""
+        cfg = AdvectionConfig(nx=128, amplitude=1.0)
+        u0 = np.asarray(initial_profile(cfg))
+        out = _final("advection1d", cfg, "f32", cfg.nx)
+        assert _rel(out, u0) < 1e-6
+        # and a quarter period is the same profile rolled nx/4 cells
+        quarter = _final("advection1d", cfg, "f32", cfg.nx // 4)
+        assert _rel(quarter, np.roll(u0, cfg.nx // 4)) < 1e-6
+
+    def test_e5m10_destroyed_r2f2_matches(self):
+        """The 1e5-amplitude pulse overflows E5M10 in the flux multiply
+        (inf -> NaN within a step); R2F2 widens k and stays within
+        multiplier rounding of the exact translation."""
+        cfg = AdvectionConfig()
+        steps = cfg.nx  # one period: the f32 reference is the initial profile
+        ref = _final("advection1d", cfg, "f32", steps)
+        half = _final("advection1d", cfg, "e5m10", steps)
+        rr = _final("advection1d", cfg, "r2f2_16", steps)
+        assert not np.isfinite(half).all()
+        assert np.isfinite(rr).all()
+        assert _rel(rr, ref) < 0.05
+
+
+class TestBurgers1D:
+    def test_lax_friedrichs_conserves_mass(self):
+        """Conservative form on a periodic domain: sum(u) is invariant."""
+        cfg = BurgersConfig(nx=128)
+        u0 = np.asarray(initial_wave(cfg))
+        out = _final("burgers1d", cfg, "f32", 500)
+        assert np.isfinite(out).all()
+        assert abs(float(out.sum()) - float(u0.sum())) < 1e-2 * cfg.amplitude
+
+    def test_shock_decays_amplitude(self):
+        """Post-shock N-wave decay — the range drift the tracked modes ride."""
+        cfg = BurgersConfig(nx=128)
+        out = _final("burgers1d", cfg, "f32", 1200)
+        assert np.abs(out).max() < 0.3 * cfg.amplitude
+
+    @pytest.mark.slow
+    def test_e5m10_destroyed_r2f2_matches(self):
+        """u*u ~ 1.2e5 overflows E5M10 at t=0; R2F2's runtime split carries
+        the squared range and matches f32 through shock formation."""
+        cfg = BurgersConfig()
+        steps = 1200
+        ref = _final("burgers1d", cfg, "f32", steps)
+        half = _final("burgers1d", cfg, "e5m10", steps)
+        rr = _final("burgers1d", cfg, "r2f2_16", steps)
+        assert not np.isfinite(half).all()
+        assert np.isfinite(rr).all()
+        assert _rel(rr, ref) < 0.05

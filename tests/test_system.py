@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.core.policy import PRESETS
@@ -11,6 +12,7 @@ from repro.serve import generate
 from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step
 
 
+@pytest.mark.slow
 def test_train_then_serve_end_to_end(tmp_path):
     """Train a tiny LM until loss visibly drops, checkpoint it, reload and
     serve batched greedy generation."""

@@ -61,6 +61,7 @@ class TestTraining:
         )
         assert losses[-1] < losses[0] * 0.95
 
+    @pytest.mark.slow
     def test_rr16_grad_compression_close_to_exact(self):
         tcfg = TrainConfig(opt=OptConfig(lr=1e-3))
         state = init_train_state(jax.random.PRNGKey(2), CFG, tcfg)
