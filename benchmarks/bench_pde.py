@@ -1,15 +1,22 @@
 """Generic per-stepper PDE benchmark — every registered solver workload
-through the same precision ladder.
+through the same precision ladder, on BOTH execution planes.
 
 One scenario per registered stepper (``repro.pde.known_steppers``): run the
-f32 reference, then each precision in the ladder, and report per-step time
-plus the paper's correctness verdict (relative L2 for decaying fields, field
-correlation for the SWE basin, exactly as the per-workload benches judged).
+f32 reference, then each precision in the ladder under
+``execution="reference"`` (the stepwise StepOps engine path) AND
+``execution="fused"`` (whole snapshot intervals as Pallas kernel chunks),
+reporting per-step wall time, the paper's correctness verdict (relative L2
+for decaying fields, field correlation for the SWE basin), static op counts
+of one snapshot-chunk program (``pallas`` = pallas_call count — the fused
+plane collapses a chunk into one; ``hlo`` = lowered instruction count), and
+the §5.3 adjustment counters (``adj=+grow/-shrink``) for tracked runs.
 ``main`` fails loudly if a registered stepper has no scenario, so adding a
 workload without benchmarking it is impossible.
 
-CSV rows: ``pde/<case>/<prec>,us_per_step,rel=..;corr=..;STATUS`` — captured
-by ``benchmarks.run`` into ``BENCH_pde.json``.
+CSV rows: ``pde/<case>/<prec>/<exec>,us_per_step,rel=..;corr=..;STATUS;...``
+— captured by ``benchmarks.run`` into ``BENCH_pde.json``. ``--smoke`` (or
+``main(smoke=True)``) caps step counts for the CI fast tier, so the bench
+trajectory accumulates on every push.
 """
 
 from __future__ import annotations
@@ -23,7 +30,15 @@ import numpy as np
 from repro.precision import PRESETS
 from repro.pde import Simulation, get_stepper, known_steppers
 
-DEFAULT_PRECS = ("e5m10", "r2f2_16", "r2f2_15", "bf16")
+DEFAULT_PRECS = ("e5m10", "r2f2_16", "r2f2_15", "bf16", "rr_tracked")
+SMOKE_STEPS = 60
+
+#: the bench ladder's precision configs: the PRESETS plus the tracked rr
+#: mode (the adjustment-counter story needs a carried tracker)
+PREC_LADDER = dict(
+    PRESETS,
+    rr_tracked=dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked"),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +66,7 @@ def scenarios():
         "swe2d": Scenario(
             swe2d.CONFIG,
             swe2d.BENCH_STEPS,
-            precs=("e5m10", "r2f2_16", "r2f2_16_384", "bf16"),
+            precs=("e5m10", "r2f2_16", "r2f2_16_384", "bf16", "rr_tracked"),
             judge="corr",
             offset=swe2d.CONFIG.depth,
         ),
@@ -79,23 +94,77 @@ def measure(out, ref, judge: str = "rel"):
     return dict(rel=rel, corr=corr, finite=finite, correct=ok)
 
 
-def run_case(name: str, sc: Scenario):
-    """f32 reference + precision ladder for one scenario -> row dicts."""
+def _iter_subjaxprs(v):
+    vals = v if isinstance(v, (list, tuple)) else (v,)
+    for w in vals:
+        inner = getattr(w, "jaxpr", w)
+        if hasattr(inner, "eqns"):
+            yield inner
+
+
+def chunk_op_counts(sim: Simulation, chunk: int, execution: str):
+    """Static op counts of one snapshot-chunk program: (pallas_calls,
+    lowered instruction count). The fused plane's signature is one
+    pallas_call per chunk where the reference plane scans per-step engine
+    ops."""
+    import jax
+
+    state0 = sim.stepper.init_state(sim.cfg)
+
+    def fn(s0):
+        return sim.run(chunk, snapshot_every=chunk, state0=s0, execution=execution).state
+
+    def count_pallas(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in _iter_subjaxprs(v):
+                    n += count_pallas(sub)
+        return n
+
+    traced = jax.jit(fn).trace(state0)  # one trace serves both counts
+    n_pallas = count_pallas(traced.jaxpr.jaxpr)
+    lowered = traced.lower().as_text()
+    n_hlo = sum(1 for line in lowered.splitlines() if " = " in line)
+    return n_pallas, n_hlo
+
+
+def run_case(name: str, sc: Scenario, smoke: bool = False):
+    """f32 reference + precision ladder, reference-vs-fused paired rows."""
     stepper = get_stepper(name)
     cfg = sc.cfg
+    steps = min(sc.steps, SMOKE_STEPS) if smoke else sc.steps
+    chunk = max(1, steps // stepper.snapshots_default)
     ref = observe(
-        stepper, cfg, Simulation(name, cfg, PRESETS["f32"]).run(sc.steps).state, sc.offset
+        stepper, cfg, Simulation(name, cfg, PRESETS["f32"]).run(steps).state, sc.offset
     )
     rows = []
-    for prec in sc.precs:
-        t0 = time.perf_counter()
-        out = observe(
-            stepper, cfg, Simulation(name, cfg, PRESETS[prec]).run(sc.steps).state, sc.offset
-        )
-        us = (time.perf_counter() - t0) * 1e6 / sc.steps
-        rows.append(
-            dict(case=sc.label or name, prec=prec, us_per_step=us, **measure(out, ref, sc.judge))
-        )
+    for prec_name in sc.precs:
+        prec = PREC_LADDER[prec_name]
+        for execution in ("reference", "fused"):
+            sim = Simulation(name, cfg, prec)
+            if execution == "fused" and not sim.fused_eligible():
+                continue  # mode/stepper outside the fused plane: no pair row
+            t0 = time.perf_counter()
+            res = sim.run(steps, execution=execution)
+            out = observe(stepper, cfg, res.state, sc.offset)
+            us = (time.perf_counter() - t0) * 1e6 / steps
+            n_pallas, n_hlo = chunk_op_counts(sim, chunk, execution)
+            row = dict(
+                case=sc.label or name,
+                prec=prec_name,
+                execution=execution,
+                us_per_step=us,
+                pallas_calls=n_pallas,
+                hlo_ops=n_hlo,
+                **measure(out, ref, sc.judge),
+            )
+            if res.tracker is not None:  # §5.3 adjustment counters
+                row["grow_adjusts"] = int(np.asarray(res.tracker.state.overflow_steps).sum())
+                row["shrink_adjusts"] = int(np.asarray(res.tracker.state.shrink_steps).sum())
+            rows.append(row)
     return rows
 
 
@@ -105,25 +174,31 @@ def format_row(r, suite: str = "pde") -> str:
         if not r["finite"]
         else ("CORRECT" if r["correct"] else "WRONG")
     )
-    return (
-        f"{suite}/{r['case']}/{r['prec']},{r['us_per_step']:.1f},"
-        f"rel={r['rel']:.4f};corr={r['corr']:.4f};{status}"
+    derived = (
+        f"rel={r['rel']:.4f};corr={r['corr']:.4f};{status};"
+        f"pallas={r['pallas_calls']};hlo={r['hlo_ops']}"
     )
+    if "grow_adjusts" in r:
+        derived += f";adj=+{r['grow_adjusts']}/-{r['shrink_adjusts']}"
+    return f"{suite}/{r['case']}/{r['prec']}/{r['execution']},{r['us_per_step']:.1f},{derived}"
 
 
-def main():
+def main(smoke: bool = False):
     table = scenarios()
     missing = [s for s in known_steppers() if s not in table]
     if missing:
         raise SystemExit(f"steppers without a bench scenario: {missing}")
-    print("# per-stepper precision ladder: E5M10 fails its way, R2F2-16 matches f32")
+    print("# per-stepper precision ladder x execution plane:")
+    print("# E5M10 fails its way, R2F2-16 matches f32; fused == reference in 1 pallas_call/chunk")
     for name in known_steppers():
         sc = table[name]
         st = get_stepper(name)
         print(f"# {name} [{st.failure_mode}] {st.story}")
-        for r in run_case(name, sc):
+        for r in run_case(name, sc, smoke=smoke):
             print(format_row(r))
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv)

@@ -1,7 +1,7 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,pde,kernels,roofline]
-                                            [--json-dir artifacts/bench]
+                                            [--json-dir artifacts/bench] [--smoke]
 
 Most benches print ``name,us_per_call,derived`` CSV lines; the harness
 captures them and emits one machine-readable ``BENCH_<suite>.json`` per
@@ -16,6 +16,7 @@ raw text lines instead of parsed rows. JSON schema:
 
 import argparse
 import contextlib
+import inspect
 import io
 import json
 import os
@@ -24,7 +25,7 @@ import time
 SUITES = ("mul", "exploration", "heat", "swe", "pde", "kernels", "roofline")
 
 
-def _run_suite(name: str) -> str:
+def _run_suite(name: str, smoke: bool = False) -> str:
     """Import lazily and run one suite, returning its captured stdout."""
     if name == "mul":
         from benchmarks import bench_mul_accuracy as mod
@@ -43,10 +44,15 @@ def _run_suite(name: str) -> str:
     else:
         raise ValueError(f"unknown suite {name!r}")
 
+    # suites that implement a reduced-step smoke tier accept main(smoke=...);
+    # the rest run their usual size regardless of --smoke
+    kwargs = {}
+    if smoke and "smoke" in inspect.signature(mod.main).parameters:
+        kwargs["smoke"] = True
     buf = io.StringIO()
     try:
         with contextlib.redirect_stdout(buf):
-            mod.main()
+            mod.main(**kwargs)
     except BaseException:
         # surface whatever the suite printed before dying, then the traceback
         print(buf.getvalue(), end="")
@@ -83,6 +89,11 @@ def main() -> None:
         default=".",
         help="directory for BENCH_<suite>.json files (created if missing)",
     )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced-step tier for per-push CI (suites that support it)",
+    )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     os.makedirs(args.json_dir, exist_ok=True)
@@ -92,13 +103,14 @@ def main() -> None:
     for suite in SUITES:
         if only is not None and suite not in only:
             continue
-        text = _run_suite(suite)
+        text = _run_suite(suite, smoke=args.smoke)
         print(text, end="")
         print()
         record = {
             "suite": suite,
             "unix_time": time.time(),
             "backend": jax.default_backend(),
+            "smoke": args.smoke,
             "rows": _parse_rows(text),
         }
         if not record["rows"]:  # non-CSV suite: keep the output verbatim

@@ -1,6 +1,7 @@
 """The registered PDE scenario zoo, one precision ladder each.
 
     PYTHONPATH=src python examples/pde_zoo.py [--steppers a,b] [--ensemble N]
+                                              [--execution reference|fused|auto]
 
 Drives every workload through the shared ``repro.pde.solver.Simulation``
 (no per-workload code): f32 reference, the failing E5M10 baseline, 16-bit
@@ -12,6 +13,13 @@ suite uses (``benchmarks.bench_pde.scenarios``), so the zoo and
 ``--ensemble N``, each scenario also runs a vmapped N-member ensemble of
 scaled initial conditions (add a sharding mesh via dist.sharding to spread
 it over devices).
+
+Fused quickstart (DESIGN.md §10): ``--execution fused`` runs every ladder
+entry as multi-substep Pallas kernel chunks — same verdicts, one
+``pallas_call`` per snapshot interval, tracked splits folded from the
+kernels' range evidence::
+
+    PYTHONPATH=src python examples/pde_zoo.py --execution fused --steppers burgers1d
 """
 
 import argparse
@@ -37,6 +45,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steppers", default=None, help="comma-separated subset")
     ap.add_argument("--ensemble", type=int, default=0, help="vmapped ensemble size")
+    ap.add_argument(
+        "--execution",
+        default="reference",
+        choices=("reference", "fused", "auto"),
+        help="arithmetic plane: stepwise engines, Pallas kernel chunks, or auto",
+    )
     args = ap.parse_args()
     names = args.steppers.split(",") if args.steppers else known_steppers()
     table = scenarios()
@@ -45,7 +59,8 @@ def main():
         stepper = get_stepper(name)
         # steppers registered outside the bench table still run, on defaults
         sc = table.get(name) or Scenario(cfg=stepper.default_config(), steps=400)
-        print(f"\n=== {name} [{stepper.failure_mode}] — {stepper.story}")
+        print(f"\n=== {name} [{stepper.failure_mode}] — {stepper.story}"
+              f" (execution={args.execution})")
         ref = None
         for prec_name, prec in (
             ("f32", PRESETS["f32"]),
@@ -54,7 +69,7 @@ def main():
             ("rr_tracked", TRACKED),
         ):
             sim = Simulation(name, sc.cfg, prec)
-            res = sim.run(sc.steps)
+            res = sim.run(sc.steps, execution=args.execution)
             obs = observe(stepper, sim.cfg, res.state, sc.offset)
             if ref is None:
                 ref = obs
@@ -79,7 +94,7 @@ def main():
             u0 = sim.stepper.init_state(sim.cfg)
             scales = np.linspace(0.5, 1.5, args.ensemble, dtype=np.float32)
             u0b = scales.reshape((-1,) + (1,) * u0.ndim) * np.asarray(u0)[None]
-            ens = sim.run_ensemble(u0b, max(1, sc.steps // 4))
+            ens = sim.run_ensemble(u0b, max(1, sc.steps // 4), execution=args.execution)
             print(f"  ensemble[{args.ensemble}] state {ens.state.shape} "
                   f"finite={bool(np.isfinite(np.asarray(ens.state)).all())}")
 

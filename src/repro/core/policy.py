@@ -35,6 +35,7 @@ __all__ = [
     "KNOWN_MODES",
     "RangeTracker",
     "tracker_init",
+    "tracker_observe",
     "tracker_update",
     "tracker_k",
     "PRESETS",
@@ -73,6 +74,15 @@ class PrecisionConfig:
     ema: float = 0.95  # RangeTracker decay
     headroom: int = 1  # extra exponent slack (in powers of 2) for tracked mode
     use_kernels: bool = False  # Pallas fast path for eligible contractions
+    #: Pallas kernel block shapes, (bm, bn, bk): the matmul fast path tiles
+    #: (bm, bk) x (bk, bn), and elementwise fused kernels (the SWE flux)
+    #: tile 2-D fields with (bm, bn) — the policy, not the kernel module,
+    #: owns that tiling, so dispatch eligibility and the kernels can never
+    #: disagree about blocks. Stencil sweep kernels are exempt: they keep
+    #: the coupled extent whole in-block by construction and only ever
+    #: block the independent row axis. Shapes that don't divide are padded
+    #: and cropped, never rejected.
+    kernel_blocks: Tuple[int, int, int] = (128, 128, 128)
 
     def __post_init__(self):
         if self.mode not in KNOWN_MODES:
@@ -132,13 +142,19 @@ def _site_max_exp(x) -> jnp.ndarray:
     return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38))).astype(jnp.float32)
 
 
-def tracker_update(
-    state: RangeTracker, site: int, a, b, cfg: PrecisionConfig
+def tracker_observe(
+    state: RangeTracker, site: int, ae, be, cfg: PrecisionConfig
 ) -> RangeTracker:
-    """Fold the live ranges of a multiplication site into the tracker and
-    re-pick its split, mirroring the paper's adjust unit across steps:
-    grow immediately on demand (overflow semantics), shrink only when the
-    EMA shows persistent redundancy."""
+    """Fold one multiplication's operand max-exponent evidence ``(ae, be)``
+    into the tracker and re-pick the site's split, mirroring the paper's
+    adjust unit across steps: grow immediately on demand (overflow
+    semantics), shrink only when the EMA shows persistent redundancy.
+
+    The evidence is exactly what the fused Pallas kernels emit per substep
+    (per-site max-exponent reductions, cross-block maxed), so the fused
+    execution plane's chunk fold-in and the stepwise ``tracker_update``
+    apply identical adjust-unit math.
+    """
     fmt = cfg.fmt
 
     def k_for(hi, lo):
@@ -148,8 +164,8 @@ def tracker_update(
         )
         return e - fmt.eb
 
-    ae = _site_max_exp(a)
-    be = _site_max_exp(b)
+    ae = jnp.asarray(ae, jnp.float32)
+    be = jnp.asarray(be, jnp.float32)
     step_hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
     step_lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
 
@@ -173,6 +189,15 @@ def tracker_update(
         overflow_steps=state.overflow_steps.at[site].add(grew.astype(jnp.int32)),
         shrink_steps=state.shrink_steps.at[site].add(shrank.astype(jnp.int32)),
     )
+
+
+def tracker_update(
+    state: RangeTracker, site: int, a, b, cfg: PrecisionConfig
+) -> RangeTracker:
+    """Fold the live ranges of a multiplication site into the tracker
+    (reduce the operands to max-exponent evidence, then
+    :func:`tracker_observe`)."""
+    return tracker_observe(state, site, _site_max_exp(a), _site_max_exp(b), cfg)
 
 
 def tracker_k(state: RangeTracker, site: int) -> jnp.ndarray:

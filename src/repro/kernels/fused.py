@@ -1,0 +1,279 @@
+"""Shared Pallas stencil-sweep builder — the fused execution plane's engine
+room (DESIGN.md §10).
+
+Every fused whole-step kernel in this package is the same machine with a
+different body: load state blocks into VMEM, run ``steps`` solver substeps
+in one in-kernel ``fori_loop`` (one HBM round trip per *chunk* instead of
+per arithmetic op), route every policy multiplication through a per-block
+runtime-k R2F2 split (:mod:`repro.kernels.blockops`), and emit — next to
+the advanced state — the per-site max-exponent evidence the precision
+adjust unit consumes between chunks. :func:`fused_sweep` owns that machine
+once: grid/BlockSpec plumbing, row padding-and-cropping for non-divisible
+shapes, the substep loop, the evidence output, and the carried-k floor
+input for tracked modes.
+
+A kernel body is a plain function over VMEM blocks::
+
+    def body(state, ops):              # state: tuple of (br, bw) f32 blocks
+        (u,) = state
+        lap = u[:, :-2] - 2.0 * u[:, 1:-1] + u[:, 2:]
+        flux = ops.mul(alpha, lap, "heat.flux")       # policy multiplier
+        ...
+        return (u_next,)
+
+``ops`` is a :class:`FusedOps` — the in-kernel mirror of
+``repro.pde.solver.StepOps``: ``mul(a, b, site)`` applies the policy's
+arithmetic family (``rr`` per-block shared split / ``bf16`` / ``fixed`` /
+``f32``, see :data:`repro.precision.fusion.FUSED_FAMILIES`) and records the
+operands' block max exponents as tracker evidence. Stepper code therefore
+reads identically inside and outside the kernel, which is what keeps the
+fused and reference paths in bit-parity wherever a block covers the whole
+field.
+
+Blocking contract: state leaves are 2-D ``(rows, width)``. The row axis is
+*independent* (batched rods, ensemble members, or a singleton) and may be
+blocked and padded freely; the width axis carries the stencil coupling for
+sweep kernels and must then stay whole in the block (``block[1] == width``)
+— halos never cross blocks by construction. Purely elementwise bodies
+(e.g. the SWE momentum flux) may tile both axes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flexformat import quantize_em
+from repro.kernels.blockops import block_max_exp, rr_mul_block
+from repro.precision.fusion import fused_family
+
+__all__ = ["on_tpu", "resolve_interpret", "FusedOps", "fused_sweep"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> interpret off TPU, compile to Mosaic on TPU — every
+    kernel entry point routes through this, so no call site hard-codes
+    interpreter mode."""
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+class FusedOps:
+    """Per-substep policy arithmetic inside a fused kernel body.
+
+    Mirrors ``repro.pde.solver.StepOps``: stepper bodies write
+    ``ops.mul(a, b, "site")`` and this object supplies the family
+    arithmetic, the per-block runtime split (floored at the carried tracker
+    k for tracked modes), and the evidence capture. One instance lives per
+    substep; the builder harvests ``.evidence`` after the body returns.
+    """
+
+    __slots__ = ("prec", "sites", "family", "k_floor", "collect", "evidence")
+
+    def __init__(self, prec, sites: Tuple[str, ...], k_floor=None, collect=False):
+        self.prec = prec
+        self.sites = tuple(sites)
+        self.family = fused_family(prec.mode)
+        if self.family is None:
+            raise ValueError(
+                f"mode {prec.mode!r} has no fused arithmetic family; "
+                "run it on the reference execution path"
+            )
+        self.k_floor = k_floor  # (n_sites,) int32 carried splits, or None
+        self.collect = collect
+        self.evidence = {}  # site -> (a_max_exp, b_max_exp) f32 scalars
+
+    def mul(self, a, b, site: str):
+        """Product of two blocks on the policy's multiplier at a named site."""
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        shape = jnp.broadcast_shapes(a.shape, b.shape)
+        a = jnp.broadcast_to(a, shape)
+        b = jnp.broadcast_to(b, shape)
+
+        exps = None
+        if self.collect or self.family == "rr":
+            exps = (block_max_exp(a), block_max_exp(b))
+        if self.collect:
+            if site in self.evidence:
+                raise ValueError(f"fused body hit site {site!r} twice in one substep")
+            self.evidence[site] = tuple(e.astype(jnp.float32) for e in exps)
+
+        if self.family == "f32":
+            return a * b
+        if self.family == "bf16":
+            return (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)).astype(jnp.float32)
+        if self.family == "fixed":
+            e, m = self.prec.fixed_em
+            return quantize_em(quantize_em(a, e, m) * quantize_em(b, e, m), e, m)
+        # "rr": per-block shared split (same-format rule), grown on demand by
+        # construction and floored at the carried adjust-unit split
+        k_min = None
+        if self.k_floor is not None:
+            k_min = self.k_floor[self.sites.index(site)]
+        return rr_mul_block(a, b, self.prec.fmt, self.prec.tail_approx, exps=exps, k_min=k_min)
+
+
+def _sweep_kernel(*refs, body, prec, sites, steps, n_state, n_out, collect, has_floor):
+    state_refs = refs[:n_state]
+    pos = n_state
+    k_floor = None
+    if has_floor:
+        k_floor = refs[pos][...][0]  # (n_sites,) int32
+        pos += 1
+    out_refs = refs[pos : pos + n_out]
+    ev_ref = refs[pos + n_out] if collect else None
+
+    state = tuple(r[...] for r in state_refs)
+    n_sites = len(sites)
+    # evidence carried functionally through the substep loop, written once
+    ev0 = jnp.zeros((steps, n_sites, 2) if collect else (1,), jnp.float32)
+
+    def substep(s, carry):
+        st, ev = carry
+        ops = FusedOps(prec, sites, k_floor=k_floor, collect=collect)
+        new = body(st, ops)
+        if not isinstance(new, tuple):
+            new = (new,)
+        if len(new) != n_out:
+            raise ValueError(
+                f"fused body returned {len(new)} leaves but the sweep was "
+                f"declared with n_out={n_out}"
+            )
+        if collect:
+            missing = [n for n in sites if n not in ops.evidence]
+            if missing:
+                raise ValueError(f"fused body never multiplied at sites {missing}")
+            for j, name in enumerate(sites):
+                ae, be = ops.evidence[name]
+                ev = ev.at[s, j, 0].set(ae)
+                ev = ev.at[s, j, 1].set(be)
+        return new, ev
+
+    if steps == 1:
+        # single-substep bodies (e.g. an elementwise flux) may return fewer
+        # leaves than they take — no loop carry to keep structurally stable
+        state, ev = substep(0, (state, ev0))
+    else:
+        if n_out != n_state:
+            raise ValueError(
+                f"multi-substep sweeps need body in/out leaf counts to match "
+                f"({n_state} != {n_out}): the output is the next substep's input"
+            )
+        state, ev = jax.lax.fori_loop(0, steps, substep, (state, ev0))
+    for r, v in zip(out_refs, state):
+        r[...] = v
+    if collect:
+        ev_ref[...] = ev[None, None]  # (1, 1, steps, n_sites, 2) block
+
+
+def fused_sweep(
+    body: Callable,
+    state: Sequence[jnp.ndarray],
+    *,
+    prec,
+    sites: Tuple[str, ...],
+    steps: int = 1,
+    block: Tuple[int, int],
+    n_out: Optional[int] = None,
+    pad_values: Optional[Sequence[float]] = None,
+    k_floor=None,
+    collect_evidence: bool = False,
+    interpret: Optional[bool] = None,
+):
+    """Run ``steps`` substeps of ``body`` over blocked state in ONE
+    ``pallas_call``.
+
+    Arguments:
+      body: ``body(state_blocks, ops) -> out_blocks`` — pure function of
+        VMEM blocks; every policy multiplication through ``ops.mul``.
+      state: 2-D ``(rows, width)`` f32 leaves, all the same shape.
+      prec: the (static, hashable) :class:`PrecisionConfig`.
+      sites: the workload's named multiplication sites, in body call order.
+      steps: substeps fused into the kernel's ``fori_loop``.
+      block: ``(block_rows, block_width)``; clamped to the state shape.
+        Sweep bodies (stencil coupling along width) must keep
+        ``block_width >= width`` so the coupled extent stays whole in-block.
+      n_out: number of leaves ``body`` returns (default: ``len(state)``).
+      pad_values: per-leaf constants used when rows/width don't divide the
+        clamped block (default 0.0) — pick values that can't dominate a
+        mixed block's max-exponent reduction (e.g. 1.0 for a divisor field).
+      k_floor: ``(n_sites,) int32`` carried tracker splits; floors the rr
+        family's per-block selection (tracked modes).
+      collect_evidence: also return the per-substep per-site operand
+        max-exponent evidence, cross-block maxed: ``(steps, n_sites, 2)``.
+
+    Returns ``(out_leaves_tuple, evidence_or_None)``.
+    """
+    interpret = resolve_interpret(interpret)
+    leaves = [jnp.asarray(x, jnp.float32) for x in state]
+    rows, width = leaves[0].shape
+    for x in leaves[1:]:
+        if x.shape != (rows, width):
+            raise ValueError(f"state leaves disagree: {x.shape} vs {(rows, width)}")
+    n_state = len(leaves)
+    n_out = n_state if n_out is None else n_out
+    n_sites = len(sites)
+
+    br = min(block[0], rows)
+    bw = min(block[1], width)
+    pr, pw = -rows % br, -width % bw
+    if pr or pw:
+        pv = tuple(pad_values) if pad_values is not None else (0.0,) * n_state
+        leaves = [
+            jnp.pad(x, ((0, pr), (0, pw)), constant_values=v)
+            for x, v in zip(leaves, pv)
+        ]
+    rp, wp = rows + pr, width + pw
+    gi, gj = rp // br, wp // bw
+
+    state_spec = pl.BlockSpec((br, bw), lambda i, j: (i, j))
+    in_specs = [state_spec] * n_state
+    inputs = list(leaves)
+    if k_floor is not None:
+        in_specs.append(pl.BlockSpec((1, n_sites), lambda i, j: (0, 0)))
+        inputs.append(jnp.asarray(k_floor, jnp.int32).reshape(1, n_sites))
+    out_specs = [state_spec] * n_out
+    out_shape = [jax.ShapeDtypeStruct((rp, wp), jnp.float32)] * n_out
+    if collect_evidence:
+        out_specs.append(
+            pl.BlockSpec((1, 1, steps, n_sites, 2), lambda i, j: (i, j, 0, 0, 0))
+        )
+        out_shape.append(jax.ShapeDtypeStruct((gi, gj, steps, n_sites, 2), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _sweep_kernel,
+            body=body,
+            prec=prec,
+            sites=tuple(sites),
+            steps=steps,
+            n_state=n_state,
+            n_out=n_out,
+            collect=collect_evidence,
+            has_floor=k_floor is not None,
+        ),
+        grid=(gi, gj),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+
+    outs = list(outs)
+    evidence = None
+    if collect_evidence:
+        # the global per-substep site evidence is the max over blocks (max of
+        # block maxes); padded-only blocks contribute their pad constants'
+        # exponents, which the pad_values contract keeps dominated
+        evidence = jnp.max(outs.pop(), axis=(0, 1))
+    if pr or pw:
+        outs = [o[:rows, :width] for o in outs]
+    return tuple(outs), evidence

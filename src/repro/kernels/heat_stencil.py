@@ -1,17 +1,19 @@
-"""Pallas kernel: 1D heat-equation explicit-FD stencil with R2F2 multiplies.
+"""Fused Pallas kernel: 1D heat-equation explicit-FD sweep with R2F2
+multiplies — built on the shared :mod:`repro.kernels.fused` sweep machinery.
 
-One solver step is ``u' = u + r * (u_left - 2u + u_right)`` (paper §2). The
-kernel fuses, per VMEM block: state quantization to the runtime format
-(storage is 16-bit in the paper's system), the stencil shifts, and the R2F2
-multiplication ``r * lap`` with per-block runtime split selection — one HBM
-round-trip per step instead of four.
+One solver step is ``u' = u + r * (u_left - 2u + u_right)`` (paper §2),
+decomposed into the two multiplications a scalar pipeline issues (``flux =
+alpha * lap`` then ``upd = flux * dtodx2``) — exactly like
+``repro.pde.heat1d``. The sweep fuses, per VMEM block: the stencil shifts,
+both policy multiplies with per-block runtime split selection, and up to a
+whole snapshot interval of substeps — one HBM round trip per chunk instead
+of four per step.
 
 Layout: many independent rods are batched as rows of a (rows, nx) array —
-the row dimension is the natural TPU parallel/shard axis. The x extent stays
-whole inside the block (a 16k-point f32 rod is 64 KiB — VMEM-friendly), so
-the shifts are in-register slices; Dirichlet boundary values are pinned.
-
-Block: (block_rows, nx); grid over row groups only; (8, 128)-aligned.
+the row dimension is the natural TPU parallel/shard axis (non-divisible row
+counts are padded and cropped). The x extent stays whole inside the block
+(a 16k-point f32 rod is 64 KiB — VMEM-friendly), so the shifts are
+in-register slices; Dirichlet boundary values are pinned.
 """
 
 from __future__ import annotations
@@ -20,51 +22,91 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels.blockops import rr_mul_block
+from repro.core.policy import PrecisionConfig
+from repro.kernels import fused
+from repro.kernels.blockops import rr_mul_block  # noqa: F401 — shared block math
+
+HEAT1D_SITES = ("heat.flux", "heat.update")
 
 
-def _heat_kernel(u_ref, c_ref, o_ref, *, fmt, steps, tail_approx):
-    u = u_ref[...]  # (br, nx) f32 — state stays f32 (paper §5.2: the unit
-    # converts from/to single precision around each multiply)
-    alpha = c_ref[0, 0]
-    dtodx2 = c_ref[0, 1]
+def _heat1d_body(alpha, dtodx2, sites):
+    """One explicit-FD substep on a (block_rows, nx) block."""
+    flux_site, update_site = sites
 
-    def one_step(_, u):
+    def body(state, ops):
+        (u,) = state
         # interior laplacian only (boundary columns are Dirichlet-pinned and
         # must not contaminate the per-block range statistics)
         lap = u[:, :-2] - 2.0 * u[:, 1:-1] + u[:, 2:]  # adds in f32
-        flux = rr_mul_block(jnp.broadcast_to(alpha, lap.shape), lap, fmt, tail_approx)
-        upd = rr_mul_block(flux, jnp.broadcast_to(dtodx2, lap.shape), fmt, tail_approx)
+        flux = ops.mul(jnp.float32(alpha), lap, flux_site)
+        upd = ops.mul(flux, jnp.float32(dtodx2), update_site)
         interior = u[:, 1:-1] + upd
-        return jnp.concatenate([u[:, :1], interior, u[:, -1:]], axis=1)
+        return (jnp.concatenate([u[:, :1], interior, u[:, -1:]], axis=1),)
 
-    o_ref[...] = jax.lax.fori_loop(0, steps, one_step, u)
+    return body
 
 
 @functools.partial(
-    jax.jit, static_argnames=("fmt", "steps", "block_rows", "tail_approx", "interpret")
+    jax.jit,
+    static_argnames=(
+        "alpha",
+        "dtodx2",
+        "prec",
+        "steps",
+        "block_rows",
+        "sites",
+        "collect_evidence",
+        "interpret",
+    ),
 )
+def heat1d_sweep(
+    u0,
+    *,
+    alpha,
+    dtodx2,
+    prec,
+    steps=1,
+    block_rows=8,
+    sites=HEAT1D_SITES,
+    k_floor=None,
+    collect_evidence=False,
+    interpret=None,
+):
+    """Fused-plane entry: advance (rows, nx) rod states ``steps`` substeps.
+
+    Returns ``(u, evidence)`` — the stepper's ``fused_step`` contract.
+    """
+    (out,), ev = fused.fused_sweep(
+        _heat1d_body(float(alpha), float(dtodx2), sites),
+        (u0,),
+        prec=prec,
+        sites=sites,
+        steps=steps,
+        block=(block_rows, u0.shape[1]),
+        k_floor=k_floor,
+        collect_evidence=collect_evidence,
+        interpret=interpret,
+    )
+    return out, ev
+
+
 def heat_stencil_pallas(
-    u0, alpha, dtodx2, *, fmt, steps=1, block_rows=8, tail_approx=True, interpret=True
+    u0, alpha, dtodx2, *, fmt, steps=1, block_rows=8, tail_approx=True, interpret=None
 ):
     """Advance (rows, nx) rod states ``steps`` explicit-FD steps, with the
     update decomposed into the two R2F2 multiplies ``alpha * lap`` and
-    ``flux * (dt/dx^2)`` exactly like repro.pde.heat1d."""
-    rows, nx = u0.shape
-    br = min(block_rows, rows)
-    if rows % br:
-        raise ValueError(f"rows {rows} not divisible by block_rows {br}")
-    c_arr = jnp.array([[alpha, dtodx2]], jnp.float32)
-    return pl.pallas_call(
-        functools.partial(_heat_kernel, fmt=fmt, steps=steps, tail_approx=tail_approx),
-        grid=(rows // br,),
-        in_specs=[
-            pl.BlockSpec((br, nx), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((br, nx), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, nx), jnp.float32),
+    ``flux * (dt/dx^2)`` exactly like repro.pde.heat1d. Kept as the
+    historical fmt-keyed surface over :func:`heat1d_sweep` (rr_tile
+    semantics, no evidence); ``interpret=None`` auto-detects the backend."""
+    prec = PrecisionConfig(mode="rr_tile", fmt=fmt, tail_approx=tail_approx)
+    out, _ = heat1d_sweep(
+        jnp.asarray(u0, jnp.float32),
+        alpha=float(alpha),
+        dtodx2=float(dtodx2),
+        prec=prec,
+        steps=steps,
+        block_rows=block_rows,
         interpret=interpret,
-    )(u0.astype(jnp.float32), c_arr)
+    )
+    return out

@@ -1,32 +1,38 @@
 """Public jit'd entry points for the Pallas kernels.
 
-``interpret`` defaults to True unless a real TPU backend is present —
-this container validates kernel bodies on CPU (interpret mode executes the
-same program), while on TPU the identical call sites compile to Mosaic.
+``interpret`` defaults to None everywhere, which
+:func:`repro.kernels.fused.resolve_interpret` resolves to True unless a
+real TPU backend is present — this container validates kernel bodies on CPU
+(interpret mode executes the same program), while on TPU the identical call
+sites compile to Mosaic. The fused whole-step kernels (heat_stencil,
+pde_steps, swe_flux) route through the same resolution inside
+:func:`repro.kernels.fused.fused_sweep`, so no call site hard-codes the
+interpreter.
 """
 
 from __future__ import annotations
 
-import jax
-
 from repro.core.flexformat import FlexFormat
 
+from .fused import on_tpu, resolve_interpret
 from .heat_stencil import heat_stencil_pallas
 from .r2f2_matmul import r2f2_matmul_pallas
 from .r2f2_quantize import r2f2_quantize_pallas
 from .swe_flux import swe_flux_pallas
 
-__all__ = ["on_tpu", "r2f2_quantize", "r2f2_matmul", "heat_stencil", "swe_flux"]
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+__all__ = [
+    "on_tpu",
+    "resolve_interpret",
+    "r2f2_quantize",
+    "r2f2_matmul",
+    "heat_stencil",
+    "swe_flux",
+]
 
 
 def r2f2_quantize(x, fmt: FlexFormat, *, block=(256, 256), interpret=None):
     """Tile-quantize x to the runtime-selected flexible format. -> (y, k_tiles)"""
-    interpret = (not on_tpu()) if interpret is None else interpret
-    return r2f2_quantize_pallas(x, fmt=fmt, block=block, interpret=interpret)
+    return r2f2_quantize_pallas(x, fmt=fmt, block=block, interpret=resolve_interpret(interpret))
 
 
 def r2f2_matmul(
@@ -40,7 +46,6 @@ def r2f2_matmul(
     interpret=None,
 ):
     """A @ B through block-granular R2F2 multipliers (f32 accumulate)."""
-    interpret = (not on_tpu()) if interpret is None else interpret
     return r2f2_matmul_pallas(
         a,
         b,
@@ -48,13 +53,12 @@ def r2f2_matmul(
         blocks=blocks,
         round_products=round_products,
         tail_approx=tail_approx,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )
 
 
 def heat_stencil(u0, alpha, dtodx2, fmt: FlexFormat, *, steps=1, block_rows=8, tail_approx=True, interpret=None):
     """Fused heat-equation step(s) with R2F2 multiplies and 16-bit state."""
-    interpret = (not on_tpu()) if interpret is None else interpret
     return heat_stencil_pallas(
         u0, alpha, dtodx2, fmt=fmt, steps=steps, block_rows=block_rows, tail_approx=tail_approx, interpret=interpret
     )
@@ -62,7 +66,6 @@ def heat_stencil(u0, alpha, dtodx2, fmt: FlexFormat, *, steps=1, block_rows=8, t
 
 def swe_flux(q1, q3, fmt: FlexFormat, *, block=(64, 128), tail_approx=True, interpret=None):
     """Fused SWE momentum-flux (the paper's substituted equation) per block."""
-    interpret = (not on_tpu()) if interpret is None else interpret
     return swe_flux_pallas(
         q1, q3, fmt=fmt, block=block, tail_approx=tail_approx, interpret=interpret
     )

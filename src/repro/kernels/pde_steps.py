@@ -1,0 +1,197 @@
+"""Fused whole-step Pallas kernels for the beyond-paper PDE workloads
+(heat2d / advection1d / burgers1d), on the shared
+:mod:`repro.kernels.fused` sweep machinery.
+
+Each kernel advances the workload a whole multi-substep chunk inside one
+``pallas_call`` — the same two-phase shape as ``heat_stencil``: state loads
+once into VMEM, every policy multiplication runs on a per-block runtime
+split, and the per-site range evidence comes back for the adjust unit. The
+bodies are line-for-line the registered steppers' ``step`` methods (same op
+order, same f32 adds), which is what makes the fused and reference paths
+bit-identical whenever a block covers the whole field.
+
+Layout notes: the 1-D periodic workloads keep the whole rod in-block (the
+rolls are in-register); the 2-D heat field rides flattened as one
+``(1, nx*ny)`` leaf and is reshaped inside the body — the coupled extent
+never crosses a block boundary, so there is no inter-block halo to
+exchange.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused
+
+HEAT2D_SITES = ("heat2d.flux", "heat2d.update")
+ADVECTION1D_SITES = ("adv.flux", "adv.update")
+BURGERS1D_SITES = ("burgers.uu", "burgers.flux")
+
+
+# ---------------------------------------------------------------------------
+# 2D heat: explicit 5-point stencil, two-multiplier split
+# ---------------------------------------------------------------------------
+
+
+def _heat2d_body(nx, ny, alpha, dtodx2, sites):
+    flux_site, update_site = sites
+
+    def body(state, ops):
+        (uf,) = state
+        u = uf.reshape(nx, ny)
+        lap = (  # 5-point interior laplacian, adds in f32
+            u[:-2, 1:-1]
+            + u[2:, 1:-1]
+            + u[1:-1, :-2]
+            + u[1:-1, 2:]
+            - 4.0 * u[1:-1, 1:-1]
+        )
+        flux = ops.mul(jnp.float32(alpha), lap, flux_site)
+        upd = ops.mul(flux, jnp.float32(dtodx2), update_site)
+        u = u.at[1:-1, 1:-1].add(upd)
+        return (u.reshape(1, nx * ny),)
+
+    return body
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "dtodx2", "prec", "steps", "sites", "collect_evidence", "interpret"),
+)
+def heat2d_sweep(
+    u0,
+    *,
+    alpha,
+    dtodx2,
+    prec,
+    steps=1,
+    sites=HEAT2D_SITES,
+    k_floor=None,
+    collect_evidence=False,
+    interpret=None,
+):
+    """Advance a (nx, ny) field ``steps`` 5-point explicit-FD substeps.
+
+    Returns ``(u, evidence)``.
+    """
+    nx, ny = u0.shape
+    (out,), ev = fused.fused_sweep(
+        _heat2d_body(nx, ny, float(alpha), float(dtodx2), sites),
+        (u0.reshape(1, nx * ny),),
+        prec=prec,
+        sites=sites,
+        steps=steps,
+        block=(1, nx * ny),
+        k_floor=k_floor,
+        collect_evidence=collect_evidence,
+        interpret=interpret,
+    )
+    return out.reshape(nx, ny), ev
+
+
+# ---------------------------------------------------------------------------
+# 1D advection: flux-form upwind, periodic
+# ---------------------------------------------------------------------------
+
+
+def _advection1d_body(speed, dtodx, sites):
+    flux_site, update_site = sites
+
+    def body(state, ops):
+        (u,) = state
+        f = ops.mul(jnp.float32(speed), u, flux_site)
+        df = f - jnp.roll(f, 1, axis=1)  # upwind difference, adds in f32
+        upd = ops.mul(jnp.float32(dtodx), df, update_site)
+        return (u - upd,)
+
+    return body
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("speed", "dtodx", "prec", "steps", "sites", "collect_evidence", "interpret"),
+)
+def advection1d_sweep(
+    u0,
+    *,
+    speed,
+    dtodx,
+    prec,
+    steps=1,
+    sites=ADVECTION1D_SITES,
+    k_floor=None,
+    collect_evidence=False,
+    interpret=None,
+):
+    """Advance a (nx,) periodic profile ``steps`` upwind substeps.
+
+    Returns ``(u, evidence)``.
+    """
+    (out,), ev = fused.fused_sweep(
+        _advection1d_body(float(speed), float(dtodx), sites),
+        (u0[None, :],),
+        prec=prec,
+        sites=sites,
+        steps=steps,
+        block=(1, u0.shape[0]),
+        k_floor=k_floor,
+        collect_evidence=collect_evidence,
+        interpret=interpret,
+    )
+    return out[0], ev
+
+
+# ---------------------------------------------------------------------------
+# 1D Burgers: conservative Lax-Friedrichs, periodic
+# ---------------------------------------------------------------------------
+
+
+def _burgers1d_body(dt, dx, sites):
+    uu_site, flux_site = sites
+
+    def body(state, ops):
+        (u,) = state
+        uu = ops.mul(u, u, uu_site)  # the nonlinear flux product
+        f = ops.mul(jnp.float32(0.5), uu, flux_site)  # f = u^2/2
+        u_avg = 0.5 * (jnp.roll(u, -1, axis=1) + jnp.roll(u, 1, axis=1))
+        df = jnp.roll(f, -1, axis=1) - jnp.roll(f, 1, axis=1)
+        return (u_avg - (dt / (2.0 * dx)) * df,)
+
+    return body
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("dt", "dx", "prec", "steps", "sites", "collect_evidence", "interpret"),
+)
+def burgers1d_sweep(
+    u0,
+    *,
+    dt,
+    dx,
+    prec,
+    steps=1,
+    sites=BURGERS1D_SITES,
+    k_floor=None,
+    collect_evidence=False,
+    interpret=None,
+):
+    """Advance a (nx,) periodic wave ``steps`` Lax-Friedrichs substeps.
+
+    Returns ``(u, evidence)``.
+    """
+    (out,), ev = fused.fused_sweep(
+        _burgers1d_body(float(dt), float(dx), sites),
+        (u0[None, :],),
+        prec=prec,
+        sites=sites,
+        steps=steps,
+        block=(1, u0.shape[0]),
+        k_floor=k_floor,
+        collect_evidence=collect_evidence,
+        interpret=interpret,
+    )
+    return out[0], ev

@@ -79,19 +79,31 @@ def r2f2_matmul_pallas(
     tail_approx=True,
     interpret=True,
 ):
-    """C = A @ B with R2F2 block semantics. A: (M, K) f32, B: (K, N) f32."""
+    """C = A @ B with R2F2 block semantics. A: (M, K) f32, B: (K, N) f32.
+
+    Non-divisible shapes are zero-padded up to block multiples and the
+    output cropped back: padded zeros contribute nothing to the products
+    and never raise a block's max exponent, so the real region's split
+    selection and quantization are unchanged.
+    """
     m, kdim = a.shape
     k2, n = b.shape
     if kdim != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
     bm = min(blocks[0], m)
     bn = min(blocks[1], n)
     bk = min(blocks[2], kdim)
-    if m % bm or n % bn or kdim % bk:
-        raise ValueError(f"shapes {a.shape}@{b.shape} not divisible by {(bm, bn, bk)}")
+    pm, pn, pk = -m % bm, -n % bn, -kdim % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    mp, np_, kp = m + pm, n + pn, kdim + pk
 
-    grid = (m // bm, n // bn, kdim // bk)
-    return pl.pallas_call(
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
         functools.partial(
             _matmul_kernel,
             fmt=fmt,
@@ -104,6 +116,7 @@ def r2f2_matmul_pallas(
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    )(a, b)
+    return out[:m, :n] if (pm or pn) else out

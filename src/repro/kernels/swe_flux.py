@@ -1,58 +1,87 @@
-"""Pallas kernel: SWE momentum-flux equation with R2F2 multiplies.
+"""Fused Pallas kernel: SWE momentum-flux equation with R2F2 multiplies —
+built on the shared :mod:`repro.kernels.fused` sweep machinery.
 
 The paper's substituted sub-equation (§5.3) is the SWE hot spot:
 
     Ux_mx = q1*q1/q3 + 0.5*g*q3*q3
 
-This kernel fuses, per VMEM block: the two R2F2 multiplications (q1*q1 and
-g/2*q3*q3, each with a block-shared runtime split), the f32 division, and
-the add — one HBM round trip for the whole flux field instead of five.
+This kernel fuses, per VMEM block: the three policy multiplications (q1*q1,
+q3*q3 and g/2*(q3*q3), each with a block-shared runtime split), the f32
+division, and the add — one HBM round trip for the whole flux field instead
+of five. The body is purely elementwise, so both axes tile freely;
+non-divisible shapes are padded (q3 with 1.0 so the padded divisor stays
+finite and can't dominate a mixed block's range reduction) and cropped.
 
 Blocks are (bm, bn) tiles over the 2D field, (8, 128)-aligned.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.kernels.blockops import rr_mul_block
+from repro.core.policy import PrecisionConfig
+from repro.kernels import fused
+from repro.kernels.blockops import rr_mul_block  # noqa: F401 — shared block math
 
 G_GRAV = 9.81
 DEFAULT_BLOCK = (64, 128)
 
-
-def _swe_flux_kernel(q1_ref, q3_ref, o_ref, *, fmt, tail_approx):
-    q1 = q1_ref[...]
-    q3 = q3_ref[...]
-    t1 = rr_mul_block(q1, q1, fmt, tail_approx)  # multiplier 1
-    t2 = t1 / q3  # f32 divider (R2F2 is a multiplier)
-    t3 = rr_mul_block(q3, q3, fmt, tail_approx)  # multiplier 2
-    t4 = rr_mul_block(jnp.full_like(t3, 0.5 * G_GRAV), t3, fmt, tail_approx)  # mult 3
-    o_ref[...] = t2 + t4
+SWE_SITES = ("swe.q1q1", "swe.q3q3", "swe.gq3")
 
 
-@functools.partial(
-    jax.jit, static_argnames=("fmt", "block", "tail_approx", "interpret")
-)
-def swe_flux_pallas(q1, q3, *, fmt, block=DEFAULT_BLOCK, tail_approx=True, interpret=True):
-    """Momentum flux over 2D fields q1=(hu), q3=h. Returns same-shape f32."""
-    m, n = q1.shape
-    bm = min(block[0], m)
-    bn = min(block[1], n)
-    if m % bm or n % bn:
-        raise ValueError(f"shape {q1.shape} not divisible by block ({bm},{bn})")
-    return pl.pallas_call(
-        functools.partial(_swe_flux_kernel, fmt=fmt, tail_approx=tail_approx),
-        grid=(m // bm, n // bn),
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+def _swe_flux_body(sites):
+    q1q1_site, q3q3_site, gq3_site = sites
+
+    def body(state, ops):
+        q1, q3 = state
+        t1 = ops.mul(q1, q1, q1q1_site)  # multiplier 1
+        t2 = t1 / q3  # f32 divider (R2F2 is a multiplier)
+        t3 = ops.mul(q3, q3, q3q3_site)  # multiplier 2
+        t4 = ops.mul(jnp.full_like(t3, 0.5 * G_GRAV), t3, gq3_site)  # mult 3
+        return (t2 + t4,)
+
+    return body
+
+
+def swe_flux_fused(
+    q1,
+    q3,
+    *,
+    prec,
+    block=None,
+    sites=SWE_SITES,
+    k_floor=None,
+    collect_evidence=False,
+    interpret=None,
+):
+    """Fused-plane entry: momentum flux + per-site evidence over 2D fields.
+
+    ``block`` defaults to the policy's ``kernel_blocks[:2]``. Returns
+    ``(flux, evidence)`` with evidence shaped ``(1, n_sites, 2)`` (the flux
+    is one substep of a fused chunk).
+    """
+    block = tuple(prec.kernel_blocks[:2]) if block is None else block
+    (out,), ev = fused.fused_sweep(
+        _swe_flux_body(sites),
+        (q1, q3),
+        prec=prec,
+        sites=sites,
+        steps=1,
+        block=block,
+        n_out=1,
+        pad_values=(0.0, 1.0),  # q3 is a divisor: pad finite, range-neutral
+        k_floor=k_floor,
+        collect_evidence=collect_evidence,
         interpret=interpret,
-    )(q1.astype(jnp.float32), q3.astype(jnp.float32))
+    )
+    return out, ev
+
+
+def swe_flux_pallas(q1, q3, *, fmt, block=DEFAULT_BLOCK, tail_approx=True, interpret=None):
+    """Momentum flux over 2D fields q1=(hu), q3=h. Returns same-shape f32.
+
+    Historical fmt-keyed surface over :func:`swe_flux_fused` (rr_tile
+    semantics, no evidence); ``interpret=None`` auto-detects the backend."""
+    prec = PrecisionConfig(mode="rr_tile", fmt=fmt, tail_approx=tail_approx)
+    out, _ = swe_flux_fused(q1, q3, prec=prec, block=block, interpret=interpret)
+    return out

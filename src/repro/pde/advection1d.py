@@ -76,3 +76,28 @@ class Advection1DStepper(Stepper):
         df = f - jnp.roll(f, 1)  # upwind difference, adds in f32
         upd = ops.mul(jnp.float32(cfg.dtodx), df, "adv.update")  # multiplier 2
         return u - upd
+
+    def fused_step(
+        self,
+        u,
+        cfg: AdvectionConfig,
+        prec,
+        steps: int,
+        *,
+        k_floor=None,
+        collect_evidence: bool = False,
+        interpret=None,
+    ):
+        from repro.kernels.pde_steps import advection1d_sweep  # lazy: pallas off cold paths
+
+        return advection1d_sweep(
+            u,
+            speed=cfg.speed,
+            dtodx=cfg.dtodx,
+            prec=prec,
+            steps=steps,
+            sites=self.sites,
+            k_floor=k_floor,
+            collect_evidence=collect_evidence,
+            interpret=interpret,
+        )

@@ -73,3 +73,28 @@ class Burgers1DStepper(Stepper):
         u_avg = 0.5 * (jnp.roll(u, -1) + jnp.roll(u, 1))  # LF average, f32 adds
         df = jnp.roll(f, -1) - jnp.roll(f, 1)
         return u_avg - (cfg.dt / (2.0 * cfg.dx)) * df
+
+    def fused_step(
+        self,
+        u,
+        cfg: BurgersConfig,
+        prec,
+        steps: int,
+        *,
+        k_floor=None,
+        collect_evidence: bool = False,
+        interpret=None,
+    ):
+        from repro.kernels.pde_steps import burgers1d_sweep  # lazy: pallas off cold paths
+
+        return burgers1d_sweep(
+            u,
+            dt=cfg.dt,
+            dx=cfg.dx,
+            prec=prec,
+            steps=steps,
+            sites=self.sites,
+            k_floor=k_floor,
+            collect_evidence=collect_evidence,
+            interpret=interpret,
+        )

@@ -99,6 +99,33 @@ class Heat1DStepper(Stepper):
         interior = u[1:-1] + upd
         return jnp.concatenate([u[:1], interior, u[-1:]])
 
+    def fused_step(
+        self,
+        u,
+        cfg: HeatConfig,
+        prec,
+        steps: int,
+        *,
+        k_floor=None,
+        collect_evidence: bool = False,
+        interpret=None,
+    ):
+        from repro.kernels.heat_stencil import heat1d_sweep  # lazy: pallas off cold paths
+
+        out, ev = heat1d_sweep(
+            u[None, :],
+            alpha=cfg.alpha,
+            dtodx2=cfg.dtodx2,
+            prec=prec,
+            steps=steps,
+            block_rows=1,
+            sites=self.sites,
+            k_floor=k_floor,
+            collect_evidence=collect_evidence,
+            interpret=interpret,
+        )
+        return out[0], ev
+
 
 _STEPPER = Heat1DStepper()
 

@@ -112,3 +112,28 @@ class Heat2DStepper(Stepper):
         flux = ops.mul(jnp.float32(cfg.alpha), lap, "heat2d.flux")  # multiplier 1
         upd = ops.mul(flux, jnp.float32(cfg.dtodx2), "heat2d.update")  # multiplier 2
         return u.at[1:-1, 1:-1].add(upd)
+
+    def fused_step(
+        self,
+        u,
+        cfg: Heat2DConfig,
+        prec,
+        steps: int,
+        *,
+        k_floor=None,
+        collect_evidence: bool = False,
+        interpret=None,
+    ):
+        from repro.kernels.pde_steps import heat2d_sweep  # lazy: pallas off cold paths
+
+        return heat2d_sweep(
+            u,
+            alpha=cfg.alpha,
+            dtodx2=cfg.dtodx2,
+            prec=prec,
+            steps=steps,
+            sites=self.sites,
+            k_floor=k_floor,
+            collect_evidence=collect_evidence,
+            interpret=interpret,
+        )

@@ -23,6 +23,17 @@ paper exercises it. This module owns the simulation loop once:
 Steppers register under a string key (:mod:`repro.pde.registry`, mirroring
 ``precision/registry.py``), so benchmarks, examples and docs enumerate
 scenarios instead of importing workload modules. See DESIGN.md §9.
+
+The driver owns TWO arithmetic planes (``run(..., execution=...)``,
+DESIGN.md §10): the reference ``StepOps`` path above, and a **fused
+execution plane** where whole snapshot intervals run as multi-substep
+Pallas kernel chunks through the stepper's optional ``fused_step`` hook —
+one HBM round trip per chunk, per-block runtime splits selected in VMEM,
+and the kernels' per-site range evidence folded into the carried tracker
+between chunks (:func:`repro.precision.fold_evidence`), so tracked modes
+ride the fast path with the same adjust-unit semantics. ``"auto"`` picks
+fused when :func:`repro.precision.fused_eligible` accepts and falls back to
+the reference path otherwise.
 """
 
 from __future__ import annotations
@@ -35,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.policy import PrecisionConfig
 from repro.dist.sharding import constrain
-from repro.precision import get_engine, site_tracker_init
+from repro.precision import fold_evidence, fused_eligible, get_engine, site_tracker_init
 from repro.pde.registry import get_stepper
 
 __all__ = ["Stepper", "StepOps", "Simulation", "SimResult"]
@@ -94,6 +105,21 @@ class Stepper:
     #: default number of snapshots when ``snapshot_every`` is not given
     #: (kept per-stepper so the legacy ``simulate`` shims stay bit-identical)
     snapshots_default: int = 8
+    #: Optional fused-plane hook, registered alongside ``step``. A stepper
+    #: with a fused body overrides this with a method of signature
+    #: ``fused_step(state, cfg, prec, steps, *, k_floor=None,
+    #: collect_evidence=False, interpret=None) -> (state, evidence)`` that
+    #: advances ``steps`` substeps through Pallas whole-step kernels
+    #: (:mod:`repro.kernels.fused`) and, when asked, returns the per-substep
+    #: per-site max-exponent evidence ``(steps, len(sites), 2)`` the driver
+    #: folds into the carried tracker. ``None`` means "reference path only".
+    fused_step = None
+
+    def fused_supported(self, cfg, prec: PrecisionConfig) -> bool:
+        """Shape/config eligibility gate for the fused body (mode
+        eligibility is the policy's side: ``precision.fused_eligible``)."""
+        del cfg, prec
+        return True
 
     def default_config(self):
         raise NotImplementedError
@@ -158,6 +184,29 @@ class Simulation:
             return None
         return site_tracker_init(self.stepper.sites, self.prec.fmt, k0=k0)
 
+    # -- fused-plane dispatch ----------------------------------------------
+
+    def fused_eligible(self) -> bool:
+        """Can this (stepper, cfg, prec) run on the fused execution plane?"""
+        return fused_eligible(self.prec, self.stepper, self.cfg)
+
+    def _resolve_execution(self, execution: str) -> str:
+        if execution not in ("reference", "fused", "auto"):
+            raise ValueError(
+                f"unknown execution mode {execution!r}; "
+                "expected 'reference' | 'fused' | 'auto'"
+            )
+        if execution == "auto":
+            return "fused" if self.fused_eligible() else "reference"
+        if execution == "fused" and not self.fused_eligible():
+            raise ValueError(
+                f"stepper {self.stepper.name!r} is not fused-eligible under "
+                f"mode {self.prec.mode!r} (no fused_step hook, unknown fused "
+                "arithmetic family, or unsupported shape); use "
+                "execution='auto' for graceful fallback"
+            )
+        return execution
+
     # -- single run ---------------------------------------------------------
 
     def run(
@@ -167,6 +216,7 @@ class Simulation:
         snapshot_every: Optional[int] = None,
         state0=None,
         tracker=None,
+        execution: str = "reference",
     ) -> SimResult:
         """Advance ``steps`` updates, snapshotting observables periodically.
 
@@ -175,12 +225,24 @@ class Simulation:
         the flexible split ``k`` genuinely evolves across time. Pass an
         explicit ``tracker`` to resume from saved adjust-unit state; by
         default tracked modes start from :meth:`init_tracker`.
+
+        ``execution`` selects the arithmetic plane (DESIGN.md §10):
+
+        * ``"reference"`` — the stepwise ``StepOps`` engine path (default;
+          bit-exact emulation semantics, every mode).
+        * ``"fused"`` — whole snapshot intervals run as multi-substep Pallas
+          kernel chunks via the stepper's ``fused_step`` hook; tracked modes
+          fold the kernels' per-site range evidence into the carried tracker
+          between chunks. Raises if the stepper/mode is not fused-eligible.
+        * ``"auto"`` — ``"fused"`` when eligible, else ``"reference"``.
         """
         stepper, cfg, prec = self.stepper, self.cfg, self.prec
         state0 = stepper.init_state(cfg) if state0 is None else state0
         if tracker is None:
             tracker = self.init_tracker()
         every = snapshot_every or max(1, steps // stepper.snapshots_default)
+        if self._resolve_execution(execution) == "fused":
+            return self._run_fused(steps, every, state0, tracker)
 
         def body(carry, _):
             state, tr = carry
@@ -201,6 +263,45 @@ class Simulation:
         state, tracker = carry
         return SimResult(state, snaps, tracker)
 
+    def _run_fused(self, steps: int, every: int, state0, tracker) -> SimResult:
+        """The fused plane's chunked loop: one multi-substep kernel call per
+        snapshot interval, tracker evidence folded in between chunks.
+
+        The carried tracker's per-site splits enter each chunk as the rr
+        family's k floor (the adjust unit's persistent format choice); the
+        chunk's per-substep evidence then replays through the same
+        adjust-unit math the stepwise loop applies
+        (:func:`repro.precision.fold_evidence`).
+        """
+        stepper, cfg, prec = self.stepper, self.cfg, self.prec
+
+        def chunk(carry, n):
+            state, tr = carry
+            state, ev = stepper.fused_step(
+                state,
+                cfg,
+                prec,
+                n,
+                k_floor=None if tr is None else tr.state.k,
+                collect_evidence=tr is not None,
+            )
+            if tr is not None:
+                tr = fold_evidence(tr, ev, prec)
+            return state, tr
+
+        def outer(carry, _):
+            carry = chunk(carry, every)
+            return carry, stepper.observables(carry[0], cfg)
+
+        n_out = steps // every
+        carry = (state0, tracker)
+        carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
+        rem = steps - n_out * every
+        if rem:
+            carry = chunk(carry, rem)
+        state, tracker = carry
+        return SimResult(state, snaps, tracker)
+
     # -- ensembles ----------------------------------------------------------
 
     def run_ensemble(
@@ -210,6 +311,7 @@ class Simulation:
         *,
         snapshot_every: Optional[int] = None,
         sharded: bool = False,
+        execution: str = "reference",
     ) -> SimResult:
         """Vmapped ensemble over a batch of initial conditions.
 
@@ -224,9 +326,14 @@ class Simulation:
         """
         if sharded:
             state0_batch = _constrain_ensemble(state0_batch)
+        # resolve once outside the vmap so an ineligible explicit "fused"
+        # raises eagerly with the real reason rather than from inside a trace
+        execution = self._resolve_execution(execution)
 
         def one(s0):
-            return self.run(steps, snapshot_every=snapshot_every, state0=s0)
+            return self.run(
+                steps, snapshot_every=snapshot_every, state0=s0, execution=execution
+            )
 
         res = jax.vmap(one)(state0_batch)
         if sharded:

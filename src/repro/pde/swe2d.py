@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.precision import PrecisionConfig
@@ -89,15 +90,16 @@ def _momentum_flux_x(q1, q3, prec: PrecisionConfig):
     return _momentum_flux(q1, q3, StepOps(prec))
 
 
-def _flux_F(U, ops: StepOps):
+def _flux_F(U, mom):
+    """F(U) with the substituted momentum flux computed by ``mom(q1, q3)``."""
     h, hu, hv = U[0], U[1], U[2]
-    return jnp.stack([hu, _momentum_flux(hu, h, ops), hu * hv / h])
+    return jnp.stack([hu, mom(hu, h), hu * hv / h])
 
 
-def _flux_G(U, ops: StepOps):
+def _flux_G(U, mom):
     h, hu, hv = U[0], U[1], U[2]
     # G's momentum-y flux is the same algebraic form in (hv, h)
-    return jnp.stack([hv, hu * hv / h, _momentum_flux(hv, h, ops)])
+    return jnp.stack([hv, hu * hv / h, mom(hv, h)])
 
 
 def _reflect(U):
@@ -113,6 +115,35 @@ def _reflect(U):
 
 
 _F32 = PrecisionConfig(mode="f32")
+
+
+def _lw_step(U, cfg: SWEConfig, mom):
+    """One Richtmyer two-step Lax-Wendroff update. ``mom(q1, q3)`` computes
+    the paper's substituted x-midpoint momentum flux (the only policy-routed
+    sub-equation); every other sub-equation stays f32."""
+    dt, dx, dy = cfg.dt, cfg.dx, cfg.dy
+    f32 = StepOps(_F32)
+
+    def f32_mom(q1, q3):
+        return _momentum_flux(q1, q3, f32)
+
+    F = _flux_F(U, f32_mom)
+    Gf = _flux_G(U, f32_mom)
+
+    # half-step states at x- and y-midpoints (interior staggered grids)
+    Ux = 0.5 * (U[:, 1:, :] + U[:, :-1, :]) - (dt / (2 * dx)) * (F[:, 1:, :] - F[:, :-1, :])
+    Uy = 0.5 * (U[:, :, 1:] + U[:, :, :-1]) - (dt / (2 * dy)) * (Gf[:, :, 1:] - Gf[:, :, :-1])
+
+    Fx = _flux_F(Ux, mom)  # fluxes at x-midpoints — the paper's Ux_mx eq
+    Gy = _flux_G(Uy, f32_mom)
+
+    interior = (
+        U[:, 1:-1, 1:-1]
+        - (dt / dx) * (Fx[:, 1:, 1:-1] - Fx[:, :-1, 1:-1])
+        - (dt / dy) * (Gy[:, 1:-1, 1:] - Gy[:, 1:-1, :-1])
+    )
+    U = U.at[:, 1:-1, 1:-1].set(interior)
+    return _reflect(U)
 
 
 @register_stepper("swe2d")
@@ -138,26 +169,46 @@ class SWE2DStepper(Stepper):
         return initial_state(cfg)
 
     def step(self, U, cfg: SWEConfig, ops: StepOps):
-        dt, dx, dy = cfg.dt, cfg.dx, cfg.dy
-        f32 = StepOps(_F32)
+        return _lw_step(U, cfg, lambda q1, q3: _momentum_flux(q1, q3, ops))
 
-        F = _flux_F(U, f32)
-        Gf = _flux_G(U, f32)
+    def fused_step(
+        self,
+        U,
+        cfg: SWEConfig,
+        prec,
+        steps: int,
+        *,
+        k_floor=None,
+        collect_evidence: bool = False,
+        interpret=None,
+    ):
+        """Fused-plane chunk: the substituted momentum-flux equation runs in
+        the Pallas :func:`repro.kernels.swe_flux.swe_flux_fused` kernel (its
+        three policy multiplications + division + add in one VMEM pass);
+        the rest of the Lax-Wendroff step is f32 XLA, and the substep loop
+        is a scan around the kernel call — the fusion boundary is the
+        paper's §5.3 substitution boundary."""
+        from repro.kernels.swe_flux import swe_flux_fused  # lazy: pallas off cold paths
 
-        # half-step states at x- and y-midpoints (interior staggered grids)
-        Ux = 0.5 * (U[:, 1:, :] + U[:, :-1, :]) - (dt / (2 * dx)) * (F[:, 1:, :] - F[:, :-1, :])
-        Uy = 0.5 * (U[:, :, 1:] + U[:, :, :-1]) - (dt / (2 * dy)) * (Gf[:, :, 1:] - Gf[:, :, :-1])
+        def mom(q1, q3):
+            flux, ev = swe_flux_fused(
+                q1,
+                q3,
+                prec=prec,
+                sites=self.sites,
+                k_floor=k_floor,
+                collect_evidence=collect_evidence,
+                interpret=interpret,
+            )
+            mom.evidence = ev
+            return flux
 
-        Fx = _flux_F(Ux, ops)  # fluxes at x-midpoints — the paper's Ux_mx eq
-        Gy = _flux_G(Uy, f32)
+        def substep(U, _):
+            U = _lw_step(U, cfg, mom)
+            return U, mom.evidence  # (1, n_sites, 2) per substep, or None
 
-        interior = (
-            U[:, 1:-1, 1:-1]
-            - (dt / dx) * (Fx[:, 1:, 1:-1] - Fx[:, :-1, 1:-1])
-            - (dt / dy) * (Gy[:, 1:-1, 1:] - Gy[:, 1:-1, :-1])
-        )
-        U = U.at[:, 1:-1, 1:-1].set(interior)
-        return _reflect(U)
+        U, ev_steps = jax.lax.scan(substep, U, None, length=steps)
+        return U, None if ev_steps is None else ev_steps[:, 0]
 
     def observables(self, U, cfg: SWEConfig):
         return U[0]  # snapshot h only

@@ -37,6 +37,7 @@ delegating shims for backward compatibility.
 from __future__ import annotations
 
 from .engine import PrecisionEngine
+from .fusion import FUSED_FAMILIES, fold_evidence, fused_eligible, fused_family
 from .registry import get_engine, is_known_mode, known_modes, register_engine
 from .sites import SiteTracker, resolve_site, site_tracker_init
 from . import engines as _engines  # noqa: F401 — registers the six builtins
@@ -56,6 +57,11 @@ __all__ = [
     "SiteTracker",
     "site_tracker_init",
     "resolve_site",
+    # fused execution plane (DESIGN.md §10)
+    "FUSED_FAMILIES",
+    "fused_family",
+    "fused_eligible",
+    "fold_evidence",
     # functional API
     "prepare_operand",
     "multiply",

@@ -19,10 +19,12 @@ Engine map:
 Kernel-dispatch eligibility (DESIGN.md §7): a contraction reaches the Pallas
 ``r2f2_matmul`` kernel iff ``cfg.use_kernels`` is set, both operands are
 2-D, the spec is a plain row-by-column matmul (``"ab,bc->ac"`` up to letter
-renaming), no tracker drives ``k`` (the kernel picks its own per-block-pair
-shared split — the paper's same-format rule), and every dim is divisible by
-its clamped kernel block. The fast path is forward-only (no custom VJP);
-``use_kernels`` defaults to False so training paths are untouched.
+renaming), and no tracker drives ``k`` (the kernel picks its own
+per-block-pair shared split — the paper's same-format rule). Block shapes
+come from ``cfg.kernel_blocks`` and non-divisible dims are padded and
+cropped inside the kernel, so odd shapes stay eligible. The fast path is
+forward-only (no custom VJP); ``use_kernels`` defaults to False so training
+paths are untouched.
 """
 
 from __future__ import annotations
@@ -72,14 +74,9 @@ def kernel_eligible(spec: str, a, b, cfg) -> bool:
     if len({i, j, l}) != 3 or j2 != j or (oi, ol) != (i, l):
         return False
     (M, K), (K2, N) = a.shape, b.shape
-    if K != K2:
-        return False
-    # lazy: keep pallas off cold import paths; divisibility must mirror the
-    # kernel's own clamped-block check, so read its authoritative defaults
-    from repro.kernels.r2f2_matmul import DEFAULT_BLOCKS
-
-    bm, bn, bk = DEFAULT_BLOCKS
-    return all(d % min(blk, d) == 0 for d, blk in ((M, bm), (N, bn), (K, bk)))
+    # block shapes are a policy knob (cfg.kernel_blocks) and the kernel
+    # pads-and-crops non-divisible dims, so any 2-D matmul shape is eligible
+    return K == K2
 
 
 def _kernel_contract(a, b, cfg):
@@ -87,7 +84,9 @@ def _kernel_contract(a, b, cfg):
 
     a32 = jnp.asarray(a, jnp.float32)
     b32 = jnp.asarray(b, jnp.float32)
-    return kernel_ops.r2f2_matmul(a32, b32, cfg.fmt, tail_approx=cfg.tail_approx)
+    return kernel_ops.r2f2_matmul(
+        a32, b32, cfg.fmt, blocks=cfg.kernel_blocks, tail_approx=cfg.tail_approx
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,100 @@
+"""Fused-execution-plane policy: eligibility + tracker fold-in.
+
+The fused plane (DESIGN.md §10) runs whole solver steps — or whole
+multi-substep chunks — inside Pallas kernels built by
+:mod:`repro.kernels.fused`. This module is the *policy* half of that plane:
+
+* :data:`FUSED_FAMILIES` maps each builtin precision mode to the arithmetic
+  family a fused kernel body implements in-VMEM (``"rr"`` per-block runtime
+  split, ``"bf16"``, ``"fixed"``, ``"f32"``). Third-party engines registered
+  via :func:`repro.precision.register_engine` have no family and therefore
+  fall back to the reference ``StepOps`` path.
+* :func:`fused_eligible` is the single dispatch predicate the
+  :class:`repro.pde.solver.Simulation` driver consults for
+  ``execution="auto"``/``"fused"``.
+* :func:`fold_evidence` replays a fused chunk's per-substep site evidence
+  (per-site operand max-exponent reductions, cross-block maxed — the second
+  output every fused kernel emits) through
+  :func:`repro.core.policy.tracker_observe`, so a carried
+  :class:`~repro.precision.sites.SiteTracker` evolves exactly like the
+  stepwise loop's per-multiply ``tracker_update`` calls. This is how
+  ``rr_tracked``/``deploy`` ride the fast path: the multiplier runs at
+  hardware rate with per-block instantaneous splits (floored at the carried
+  k), while the adjust unit observes the emitted range flags between chunks
+  — the paper's Fig. 5 unit watching the datapath instead of gating it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.policy import PrecisionConfig, tracker_observe
+
+from .sites import SiteTracker, rewrap
+
+__all__ = ["FUSED_FAMILIES", "fused_family", "fused_eligible", "fold_evidence"]
+
+#: precision mode -> in-kernel arithmetic family (see module docstring).
+FUSED_FAMILIES = {
+    "f32": "f32",
+    "bf16": "bf16",
+    "deploy": "bf16",  # MXU-rate proxy: bf16 datapath + tracker bookkeeping
+    "fixed": "fixed",
+    "rr_tile": "rr",
+    "rr_tracked": "rr",
+}
+
+
+def fused_family(mode: str) -> Optional[str]:
+    """The fused kernels' arithmetic family for a mode (None: not fusable)."""
+    return FUSED_FAMILIES.get(mode)
+
+
+def fused_eligible(prec: PrecisionConfig, stepper, cfg=None) -> bool:
+    """Can this (policy, stepper, config) run on the fused execution plane?
+
+    True iff the mode has a fused arithmetic family, the stepper defines the
+    optional ``fused_step`` hook, and the stepper's ``fused_supported``
+    shape check (default: always True) accepts the config.
+    """
+    if fused_family(prec.mode) is None:
+        return False
+    if not callable(getattr(stepper, "fused_step", None)):
+        return False
+    supported = getattr(stepper, "fused_supported", None)
+    return bool(supported(cfg, prec)) if callable(supported) else True
+
+
+def fold_evidence(tracker, evidence, cfg: PrecisionConfig):
+    """Fold a fused chunk's evidence into the carried tracker.
+
+    ``evidence`` is the kernels' second output after cross-block max
+    reduction: ``(substeps, n_sites, 2)`` f32, where ``[..., 0]``/``[..., 1]``
+    are the per-site max unbiased exponents of the two operands of that
+    site's multiplication at that substep. Each substep is replayed in order
+    through :func:`repro.core.policy.tracker_observe` — identical adjust-unit
+    math (EMA, grow-on-demand, shrink-on-redundancy, §5.3 counters) to the
+    stepwise loop, just batched per chunk.
+
+    ``tracker`` may be a :class:`SiteTracker` (site order must match the
+    evidence's site axis — the stepper's ``sites`` tuple) or a raw
+    ``RangeTracker``. Returns the tracker re-wrapped around updated state.
+    """
+    if tracker is None:
+        return None
+    state = tracker.state if isinstance(tracker, SiteTracker) else tracker
+    n_sites = evidence.shape[1]
+    if len(state.k) != n_sites:
+        raise ValueError(
+            f"evidence covers {n_sites} sites but tracker has {len(state.k)} rows"
+        )
+
+    def substep(st, ev_s):  # ev_s: (n_sites, 2)
+        for j in range(n_sites):
+            st = tracker_observe(st, j, ev_s[j, 0], ev_s[j, 1], cfg)
+        return st, None
+
+    state, _ = jax.lax.scan(substep, state, evidence)
+    return rewrap(tracker, state)

@@ -1,0 +1,351 @@
+"""The fused execution plane (DESIGN.md §10): per-stepper parity between
+``execution="fused"`` (Pallas whole-step kernel chunks) and the reference
+``StepOps`` path, tracker-evidence fold-in equivalence, graceful fallback,
+and the shared sweep builder's padding/evidence plumbing."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import PRESETS
+from repro.precision import FUSED_FAMILIES, fused_eligible, get_engine
+from repro.pde import Simulation, Stepper, get_stepper, known_steppers
+from repro.pde.advection1d import AdvectionConfig
+from repro.pde.burgers1d import BurgersConfig, initial_wave
+from repro.pde.heat1d import HeatConfig
+from repro.pde.heat2d import Heat2DConfig
+from repro.pde.swe2d import SWEConfig
+
+TRACKED = dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked")
+BUILTINS = ("advection1d", "burgers1d", "heat1d", "heat2d", "swe2d")
+
+#: small shapes: every default kernel block covers the whole field, so the
+#: fused per-block split equals the reference per-tensor split and parity
+#: is bit-exact for non-tracked modes
+SMALL = {
+    "heat1d": HeatConfig(nx=64),
+    "heat2d": Heat2DConfig(nx=24, ny=24),
+    "advection1d": AdvectionConfig(nx=128),
+    "burgers1d": BurgersConfig(nx=128),
+    "swe2d": SWEConfig(nx=32, ny=32),
+}
+
+
+def _pair(name, prec, steps=48, **kw):
+    cfg = SMALL[name]
+    ref = Simulation(name, cfg, prec).run(steps, **kw)
+    fus = Simulation(name, cfg, prec).run(steps, execution="fused", **kw)
+    return ref, fus
+
+
+# ---------------------------------------------------------------------------
+# parity: fused == reference, per stepper, across the mode ladder
+# ---------------------------------------------------------------------------
+
+
+class TestFusedParity:
+    @pytest.mark.parametrize("name", BUILTINS)
+    @pytest.mark.parametrize("preset", ["r2f2_16", "e5m10", "bf16", "f32"])
+    def test_untracked_modes_bit_exact(self, name, preset):
+        """With the field whole-in-block, the fused kernels run the same
+        quantization at the same split as the reference engines — the two
+        planes must agree bit for bit, snapshots included."""
+        ref, fus = _pair(name, PRESETS[preset])
+        np.testing.assert_array_equal(np.asarray(ref.state), np.asarray(fus.state))
+        np.testing.assert_array_equal(np.asarray(ref.snapshots), np.asarray(fus.snapshots))
+        assert fus.tracker is None
+
+    @pytest.mark.parametrize("name", BUILTINS)
+    def test_deploy_bit_exact_including_tracker(self, name):
+        """deploy's bf16 datapath is split-independent, so the fused chunk's
+        arithmetic AND its evidence-fed tracker must match the stepwise loop
+        exactly."""
+        ref, fus = _pair(name, PRESETS["deploy"])
+        np.testing.assert_array_equal(np.asarray(ref.state), np.asarray(fus.state))
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.hi_ema), np.asarray(fus.tracker.state.hi_ema)
+        )
+
+    @pytest.mark.parametrize("name", BUILTINS)
+    def test_rr_tracked_close_and_same_final_k(self, name):
+        """rr_tracked fused chunks hold the carried split as a floor for the
+        whole chunk (the stepwise loop re-picks per step), so the states may
+        differ below working precision — but the adjust unit must land on
+        the same splits."""
+        ref, fus = _pair(name, TRACKED)
+        r, f = np.asarray(ref.state), np.asarray(fus.state)
+        assert np.isfinite(f).all()
+        assert np.linalg.norm(f - r) / max(np.linalg.norm(r), 1e-30) < 1e-2
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+
+    def test_all_builtins_are_fused_eligible(self):
+        """The acceptance criterion: every registered stepper has a fused
+        body for every builtin fused family."""
+        for name in known_steppers():
+            st = get_stepper(name)
+            for mode in FUSED_FAMILIES:
+                prec = dataclasses.replace(PRESETS["r2f2_16"], mode=mode)
+                assert fused_eligible(prec, st, SMALL.get(name) or st.default_config())
+
+    def test_snapshot_every_and_remainder_on_fused_path(self):
+        res = Simulation("heat1d", SMALL["heat1d"], PRESETS["r2f2_16"]).run(
+            103, snapshot_every=25, execution="fused"
+        )
+        ref = Simulation("heat1d", SMALL["heat1d"], PRESETS["r2f2_16"]).run(
+            103, snapshot_every=25
+        )
+        assert res.snapshots.shape == (4, 64)
+        np.testing.assert_array_equal(np.asarray(res.state), np.asarray(ref.state))
+
+
+# ---------------------------------------------------------------------------
+# tracker evidence: the fused chunk fold-in moves k like the stepwise loop
+# ---------------------------------------------------------------------------
+
+
+class TestTrackerEvidence:
+    def test_fused_k_grows_like_stepwise(self):
+        """heat1d from a deliberately narrow start: the fused chunks' range
+        evidence must grow the carried split exactly like per-step
+        tracker_update calls do."""
+        sim = Simulation("heat1d", SMALL["heat1d"], TRACKED)
+        tr0 = sim.init_tracker(k0=0)
+        ref = sim.run(50, tracker=tr0)
+        fus = sim.run(50, tracker=tr0, execution="fused")
+        assert int(fus.tracker.k("heat.flux")) == TRACKED.fmt.fx
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+
+    def test_fused_k_shrinks_like_stepwise(self):
+        """Burgers post-shock decay: the carried split must shrink below its
+        wide start on the fused path too, landing where the stepwise loop
+        lands (the §4.2 redundancy rule via chunk evidence)."""
+        sim = Simulation("burgers1d", SMALL["burgers1d"], TRACKED)
+        ref = sim.run(1200)
+        fus = sim.run(1200, execution="fused")
+        assert int(fus.tracker.k("burgers.uu")) < TRACKED.fmt.fx
+        assert int(np.asarray(fus.tracker.state.shrink_steps).sum()) >= 1
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+
+    def test_fused_counters_match_stepwise(self):
+        """§5.3 adjustment counters come from the same observe math, so the
+        evidence replay must reproduce them."""
+        ref, fus = _pair("burgers1d", TRACKED, steps=300)
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.shrink_steps),
+            np.asarray(fus.tracker.state.shrink_steps),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.overflow_steps),
+            np.asarray(fus.tracker.state.overflow_steps),
+        )
+
+    def test_fused_tracker_resumes(self):
+        """Two chained fused runs == one long fused run (the folded tracker
+        is the same resumable adjust-unit state as the stepwise one)."""
+        sim = Simulation("burgers1d", SMALL["burgers1d"], TRACKED)
+        a = sim.run(200, execution="fused")
+        b = sim.run(200, state0=a.state, tracker=a.tracker, execution="fused")
+        long = sim.run(400, execution="fused")
+        np.testing.assert_array_equal(np.asarray(b.state), np.asarray(long.state))
+        np.testing.assert_array_equal(
+            np.asarray(b.tracker.state.k), np.asarray(long.tracker.state.k)
+        )
+
+
+# ---------------------------------------------------------------------------
+# dispatch: auto fallback, strict "fused", eligibility surface
+# ---------------------------------------------------------------------------
+
+
+class _NoFusedStepper(Stepper):
+    sites = ("nf.mul",)
+
+    def default_config(self):
+        return None
+
+    def init_state(self, cfg):
+        return jnp.ones((16,), jnp.float32)
+
+    def step(self, u, cfg, ops):
+        return ops.mul(jnp.float32(0.5), u, "nf.mul")
+
+
+class TestFusedDispatch:
+    def _with_stepper(self):
+        from repro.pde.registry import _STEPPERS, register_stepper
+
+        register_stepper("test_nofused", _NoFusedStepper)
+        return _STEPPERS
+
+    def test_auto_degrades_gracefully_without_fused_step(self):
+        steppers = self._with_stepper()
+        try:
+            sim = Simulation("test_nofused", None, PRESETS["r2f2_16"])
+            assert not sim.fused_eligible()
+            auto = sim.run(5, execution="auto")
+            ref = sim.run(5)
+            np.testing.assert_array_equal(np.asarray(auto.state), np.asarray(ref.state))
+        finally:
+            steppers.pop("test_nofused", None)
+
+    def test_explicit_fused_raises_without_fused_step(self):
+        steppers = self._with_stepper()
+        try:
+            with pytest.raises(ValueError, match="not fused-eligible"):
+                Simulation("test_nofused", None, PRESETS["r2f2_16"]).run(
+                    5, execution="fused"
+                )
+        finally:
+            steppers.pop("test_nofused", None)
+
+    def test_auto_takes_fused_path_when_eligible(self):
+        sim = Simulation("burgers1d", SMALL["burgers1d"], PRESETS["r2f2_16"])
+        assert sim.fused_eligible()
+        auto = sim.run(30, execution="auto")
+        fused = sim.run(30, execution="fused")
+        np.testing.assert_array_equal(np.asarray(auto.state), np.asarray(fused.state))
+
+    def test_unknown_execution_mode_raises(self):
+        with pytest.raises(ValueError, match="unknown execution mode"):
+            Simulation("heat1d", SMALL["heat1d"], PRESETS["f32"]).run(
+                4, execution="warp"
+            )
+
+    def test_unknown_mode_family_falls_back(self):
+        """A mode without a fused arithmetic family is ineligible even when
+        the stepper has a fused body (third-party engines default to the
+        reference path)."""
+        st = get_stepper("heat1d")
+        assert FUSED_FAMILIES.get("rr_tile") == "rr"
+        fake = dataclasses.replace(PRESETS["r2f2_16"])  # rr_tile: eligible
+        assert fused_eligible(fake, st, SMALL["heat1d"])
+        assert get_engine("rr_tile") is not None
+
+
+# ---------------------------------------------------------------------------
+# ensembles over the fused plane
+# ---------------------------------------------------------------------------
+
+
+class TestFusedEnsembles:
+    def _batch(self, cfg, scales):
+        return jnp.asarray(scales, jnp.float32)[:, None] * initial_wave(cfg)[None, :]
+
+    def test_vmapped_fused_ensemble_matches_single_runs(self):
+        cfg = SMALL["burgers1d"]
+        sim = Simulation("burgers1d", cfg, PRESETS["r2f2_16"])
+        u0b = self._batch(cfg, [0.5, 1.0, 2.0])
+        ens = sim.run_ensemble(u0b, 60, execution="fused")
+        assert ens.state.shape == (3, cfg.nx)
+        for i in range(3):
+            single = sim.run(60, state0=u0b[i], execution="fused")
+            np.testing.assert_array_equal(
+                np.asarray(ens.state[i]), np.asarray(single.state)
+            )
+
+    def test_tracked_fused_ensemble_has_per_member_trackers(self):
+        cfg = SMALL["burgers1d"]
+        sim = Simulation("burgers1d", cfg, TRACKED)
+        ens = sim.run_ensemble(self._batch(cfg, [0.001, 1.0]), 30, execution="fused")
+        k = np.asarray(ens.tracker.state.k)
+        assert k.shape[0] == 2
+        i_uu = ens.tracker.names.index("burgers.uu")
+        assert k[0, i_uu] < k[1, i_uu]
+
+    def test_sharded_fused_ensemble_runs_under_mesh(self):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.dist.sharding import axis_rules
+
+        cfg = SMALL["burgers1d"]
+        sim = Simulation("burgers1d", cfg, PRESETS["r2f2_16"])
+        u0b = self._batch(cfg, [1.0] * 4)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+        with mesh, axis_rules(mesh):
+            ens = sim.run_ensemble(u0b, 20, sharded=True, execution="fused")
+        assert ens.state.shape == (4, cfg.nx)
+        assert np.isfinite(np.asarray(ens.state)).all()
+
+
+# ---------------------------------------------------------------------------
+# the shared sweep builder: padding, evidence plumbing, guard rails
+# ---------------------------------------------------------------------------
+
+
+class TestFusedSweepBuilder:
+    def test_row_padding_is_cropped_and_range_neutral(self):
+        """Batched rods whose row count doesn't divide block_rows: the padded
+        rows are zeros, which can't shift any block's max exponent, so each
+        real rod matches the same rod run alone."""
+        from repro.kernels.heat_stencil import heat1d_sweep
+
+        rng = np.random.default_rng(3)
+        u = (500 * rng.normal(size=(5, 64))).astype(np.float32)  # 5 % 2 != 0
+        prec = PRESETS["r2f2_16"]
+        out, _ = heat1d_sweep(
+            jnp.asarray(u), alpha=1e-5, dtodx2=4e4, prec=prec, steps=7, block_rows=2
+        )
+        assert out.shape == (5, 64)
+        solo, _ = heat1d_sweep(
+            jnp.asarray(u[4:5]), alpha=1e-5, dtodx2=4e4, prec=prec, steps=7, block_rows=1
+        )
+        np.testing.assert_array_equal(np.asarray(out[4:5]), np.asarray(solo))
+
+    def test_evidence_shape_and_values(self):
+        """Evidence is (steps, n_sites, 2) cross-block-maxed operand
+        exponents — site order is the stepper's ``sites`` tuple."""
+        from repro.kernels.pde_steps import burgers1d_sweep
+
+        cfg = SMALL["burgers1d"]
+        u0 = initial_wave(cfg)
+        out, ev = burgers1d_sweep(
+            u0, dt=cfg.dt, dx=cfg.dx, prec=TRACKED, steps=3, collect_evidence=True
+        )
+        assert ev.shape == (3, 2, 2)
+        # burgers.uu multiplies u by u: both operand exponents equal, ~e(350)
+        assert float(ev[0, 0, 0]) == float(ev[0, 0, 1]) == 8.0
+
+    def test_multi_substep_leaf_mismatch_raises(self):
+        from repro.kernels import fused
+
+        def bad_body(state, ops):
+            (a, b) = state
+            return (ops.mul(a, b, "x.y"),)  # 2 leaves in, 1 out
+
+        with pytest.raises(ValueError, match="fused body returned|in/out leaf counts"):
+            fused.fused_sweep(
+                bad_body,
+                (jnp.ones((1, 8)), jnp.ones((1, 8))),
+                prec=PRESETS["r2f2_16"],
+                sites=("x.y",),
+                steps=2,
+                block=(1, 8),
+            )
+
+    def test_swe_flux_fused_padding_matches_unpadded(self):
+        """Odd-shaped staggered SWE fields (the (nx-1, ny) midpoint grid)
+        pad-and-crop without disturbing the real region: q3 pads with 1.0 so
+        the divisor stays finite and range-neutral."""
+        from repro.kernels.swe_flux import swe_flux_fused
+
+        rng = np.random.default_rng(11)
+        q3 = (500.0 + 100 * rng.normal(size=(127, 128))).astype(np.float32)
+        q1 = (q3 * rng.normal(0, 5, (127, 128))).astype(np.float32)
+        prec = PRESETS["r2f2_16"]
+        padded, _ = swe_flux_fused(jnp.asarray(q1), jnp.asarray(q3), prec=prec)
+        whole, _ = swe_flux_fused(
+            jnp.asarray(q1), jnp.asarray(q3), prec=prec, block=(127, 128)
+        )
+        np.testing.assert_array_equal(np.asarray(padded), np.asarray(whole))

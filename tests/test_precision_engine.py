@@ -350,15 +350,39 @@ class TestKernelDispatch:
         rr_einsum("mk,kn->mn", _data((256, 256), 24), _data((256, 256), 25), PRESETS["r2f2_16"])
         assert calls == []
 
-    def test_no_dispatch_on_ineligible_shapes_or_specs(self, monkeypatch):
+    def test_no_dispatch_on_ineligible_specs(self, monkeypatch):
         calls = self._spy(monkeypatch)
         cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
-        # not divisible by the 128 block
-        rr_einsum("mk,kn->mn", _data((192, 192), 26), _data((192, 192), 27), cfg)
         # not a 2-D row-by-column contraction
         rr_einsum("bmk,kn->bmn", _data((2, 128, 128), 28), _data((128, 128), 29), cfg)
         rr_einsum("mk,nk->mn", _data((128, 128), 30), _data((128, 128), 31), cfg)
         assert calls == []
+
+    def test_non_divisible_shapes_dispatch_via_pad_and_crop(self, monkeypatch):
+        """Odd shapes stay kernel-eligible: the kernel zero-pads up to block
+        multiples and crops — padded zeros can't raise a block's max
+        exponent, so the real region matches the padded oracle exactly."""
+        from repro.kernels import ref
+
+        calls = self._spy(monkeypatch)
+        cfg = dataclasses.replace(PRESETS["r2f2_16"], use_kernels=True)
+        a, b = _data((192, 192), 26), _data((192, 192), 27)
+        out = rr_einsum("mk,kn->mn", a, b, cfg)
+        assert len(calls) == 1, "non-divisible matmul no longer dispatches"
+        pad = [(0, 64), (0, 64)]
+        oracle = ref.r2f2_matmul_ref(np.pad(a, pad), np.pad(b, pad), fmt=cfg.fmt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle)[:192, :192])
+
+    def test_kernel_blocks_is_a_policy_knob(self, monkeypatch):
+        """cfg.kernel_blocks — not the kernel module's defaults — picks the
+        fast path's tiling."""
+        calls = self._spy(monkeypatch)
+        cfg = dataclasses.replace(
+            PRESETS["r2f2_16"], use_kernels=True, kernel_blocks=(64, 64, 64)
+        )
+        rr_einsum("mk,kn->mn", _data((128, 128), 40), _data((128, 128), 41), cfg)
+        assert len(calls) == 1
+        assert calls[0][1]["blocks"] == (64, 64, 64)
 
     def test_no_dispatch_for_non_rr_engines(self, monkeypatch):
         calls = self._spy(monkeypatch)
