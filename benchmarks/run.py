@@ -9,9 +9,13 @@ suite so the perf trajectory accumulates across commits (CI keeps these as
 artifacts). Suites with non-CSV output (e.g. roofline's table) are kept as
 raw text lines instead of parsed rows. JSON schema:
 
-    {"suite": str, "unix_time": float, "backend": str,
+    {"suite": str, "unix_time": float, "backend": str, "git_sha": str|null,
      "rows": [{"name": str, "us_per_call": float, "derived": str}],
      "raw_lines": [str]}   # only when no CSV rows were found
+
+``git_sha`` + ``backend`` pin every BENCH json to the commit and JAX
+backend that produced it, so the accumulated artifact trajectory is
+attributable without relying on CI-side bookkeeping.
 """
 
 import argparse
@@ -20,9 +24,23 @@ import inspect
 import io
 import json
 import os
+import subprocess
 import time
 
 SUITES = ("mul", "exploration", "heat", "swe", "pde", "kernels", "roofline")
+
+
+def _git_sha():
+    """Commit that produced this BENCH json (None outside a git checkout)."""
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            text=True,
+            stderr=subprocess.DEVNULL,
+        ).strip()
+    except Exception:
+        return None
 
 
 def _run_suite(name: str, smoke: bool = False) -> str:
@@ -100,6 +118,7 @@ def main() -> None:
 
     import jax
 
+    git_sha = _git_sha()
     for suite in SUITES:
         if only is not None and suite not in only:
             continue
@@ -110,6 +129,7 @@ def main() -> None:
             "suite": suite,
             "unix_time": time.time(),
             "backend": jax.default_backend(),
+            "git_sha": git_sha,
             "smoke": args.smoke,
             "rows": _parse_rows(text),
         }

@@ -20,6 +20,14 @@ entry as multi-substep Pallas kernel chunks — same verdicts, one
 kernels' range evidence::
 
     PYTHONPATH=src python examples/pde_zoo.py --execution fused --steppers burgers1d
+
+Profiling quickstart (DESIGN.md §11): ``--profile`` additionally captures
+each scenario's range distributions on the f32 run and prints the
+``repro.profile`` RangeReport (per-site dynamic range, exponent spread over
+time, coverage at each flexible split) plus the splits the policy
+autotuner would deploy::
+
+    PYTHONPATH=src python examples/pde_zoo.py --profile --steppers heat1d
 """
 
 import argparse
@@ -50,6 +58,12 @@ def main():
         default="reference",
         choices=("reference", "fused", "auto"),
         help="arithmetic plane: stepwise engines, Pallas kernel chunks, or auto",
+    )
+    ap.add_argument(
+        "--profile",
+        action="store_true",
+        help="capture range distributions on the f32 run and print the "
+        "repro.profile report + autotuned splits",
     )
     args = ap.parse_args()
     names = args.steppers.split(",") if args.steppers else known_steppers()
@@ -88,6 +102,19 @@ def main():
                 ks = {n: int(res.tracker.k(n)) for n in res.tracker.names}
                 line += f"   final splits {ks}"
             print(line)
+
+        if args.profile:
+            from repro.profile import capture_profile, synthesize_policy
+
+            profile, _ = capture_profile(
+                name, sc.cfg, steps=sc.steps, execution=args.execution
+                if args.execution != "auto" else "reference",
+            )
+            print("  " + profile.report().summary().replace("\n", "\n  "))
+            pol = synthesize_policy(profile)
+            print("  autotuned splits: "
+                  + ", ".join(f"{n}: k={d['k']} [{d['k_lo']},{d['k_hi']}]"
+                              for n, d in pol.sites.items()))
 
         if args.ensemble:
             sim = Simulation(name, sc.cfg, PRESETS["r2f2_16"])

@@ -1,6 +1,12 @@
 """Batched serving example: prefill + jit decode with a KV cache.
 
     PYTHONPATH=src python examples/serve_lm.py [--ckpt-dir /tmp/repro_lm_ckpt]
+                                               [--policy artifacts/profile/<x>_policy.json]
+
+``--policy`` loads a ``repro.profile`` PrecisionPolicy artifact (e.g. one
+produced by ``python -m repro.profile heat1d``): the deploy serving
+precision is derived from the artifact — same format, same per-site split
+hints, validated-only — instead of implicit engine defaults.
 """
 
 import argparse
@@ -25,6 +31,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--policy", default=None,
+                    help="PrecisionPolicy artifact JSON for the deploy precision")
     args = ap.parse_args()
 
     cfg = SMALL
@@ -37,9 +45,19 @@ def main():
             params = restore(like, args.ckpt_dir, last)["params"]
             print(f"loaded checkpoint step {last}")
 
+    prec = PRESETS["deploy"]
+    if args.policy:
+        from repro.serve.decode import resolve_policy
+
+        prec, policy = resolve_policy(prec, args.policy)
+        print(f"serving precision from artifact {args.policy} "
+              f"(profiled on {policy.stepper!r}, fmt {policy.fmt}):")
+        for site, d in policy.sites.items():
+            print(f"  {site}: k={d['k']} bounds [{d['k_lo']}, {d['k_hi']}]")
+
     prompts = batch_for_step(cfg, 123, args.batch, args.prompt_len)["tokens"]
     t0 = time.time()
-    toks = generate(params, cfg, PRESETS["deploy"], prompts, max_new_tokens=args.new_tokens)
+    toks = generate(params, cfg, prec, prompts, max_new_tokens=args.new_tokens)
     dt = time.time() - t0
     print(f"generated {args.batch}x{args.new_tokens} tokens in {dt:.2f}s "
           f"({args.batch*args.new_tokens/dt:.1f} tok/s incl. compile)")

@@ -38,6 +38,8 @@ __all__ = [
     "tracker_observe",
     "tracker_update",
     "tracker_k",
+    "evidence_bounds",
+    "evidence_k_need",
     "PRESETS",
 ]
 
@@ -74,6 +76,18 @@ class PrecisionConfig:
     ema: float = 0.95  # RangeTracker decay
     headroom: int = 1  # extra exponent slack (in powers of 2) for tracked mode
     use_kernels: bool = False  # Pallas fast path for eligible contractions
+    #: Freeze the carried split: tracked engines (``rr_tracked``/``deploy``)
+    #: neither update the tracker nor widen the live k past it — the run
+    #: executes at exactly the per-site k the tracker was initialised with.
+    #: This is the *profiled static deployment* emulation (a silicon build
+    #: without the adjust unit, configured from a ``repro.profile``
+    #: PrecisionPolicy artifact); it also makes policy replays bit-stable.
+    pinned: bool = False
+    #: Per-site ``(k_lo, k_hi)`` clamps applied by ``tracker_observe`` when
+    #: re-picking a site's split — the autotuner's floor/ceiling hints for
+    #: ``rr_tracked`` (ordered like the tracker's site rows, normally set via
+    #: ``repro.profile.PrecisionPolicy.apply``). None: unconstrained.
+    k_bounds: Optional[Tuple[Tuple[int, int], ...]] = None
     #: Pallas kernel block shapes, (bm, bn, bk): the matmul fast path tiles
     #: (bm, bk) x (bk, bn), and elementwise fused kernels (the SWE flux)
     #: tile 2-D fields with (bm, bn) — the policy, not the kernel module,
@@ -126,12 +140,15 @@ class RangeTracker(NamedTuple):
     shrink_steps: jnp.ndarray  # int32 — cumulative adjust-down events
 
 
-def tracker_init(n_sites: int, fmt: FlexFormat, k0: Optional[int] = None) -> RangeTracker:
-    k0 = fmt.fx if k0 is None else k0  # start wide (safe), shrink via redundancy
+def tracker_init(n_sites: int, fmt: FlexFormat, k0=None) -> RangeTracker:
+    """Fresh tracker. ``k0`` may be a scalar or an ``(n_sites,)`` array of
+    per-site starting splits (e.g. a ``repro.profile`` policy's tuned k);
+    default: start wide (safe), shrink via redundancy."""
+    k0 = fmt.fx if k0 is None else k0
     return RangeTracker(
         hi_ema=jnp.zeros((n_sites,), jnp.float32),
         lo_ema=jnp.zeros((n_sites,), jnp.float32),
-        k=jnp.full((n_sites,), k0, jnp.int32),
+        k=jnp.broadcast_to(jnp.asarray(k0, jnp.int32), (n_sites,)),
         overflow_steps=jnp.zeros((n_sites,), jnp.int32),
         shrink_steps=jnp.zeros((n_sites,), jnp.int32),
     )
@@ -140,6 +157,35 @@ def tracker_init(n_sites: int, fmt: FlexFormat, k0: Optional[int] = None) -> Ran
 def _site_max_exp(x) -> jnp.ndarray:
     mag = jnp.where(jnp.isfinite(x), jnp.abs(x), 0.0)
     return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38))).astype(jnp.float32)
+
+
+def _k_for(hi, lo, fmt: FlexFormat):
+    """Split whose format covers the exponent envelope ``[lo, hi]``."""
+    e = jnp.maximum(
+        _needed_e_bits(hi.astype(jnp.int32), fmt.eb, fmt.fx),
+        _needed_e_bits_lo(lo.astype(jnp.int32), fmt.eb, fmt.fx),
+    )
+    return e - fmt.eb
+
+
+def evidence_bounds(ae, be):
+    """One observation's exponent envelope ``(step_hi, step_lo)``: operand
+    cluster tops plus the product bound (same derivation as
+    :func:`repro.core.r2f2.select_k`). Vectorized over evidence arrays."""
+    ae = jnp.asarray(ae, jnp.float32)
+    be = jnp.asarray(be, jnp.float32)
+    step_hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
+    step_lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
+    return step_hi, step_lo
+
+
+def evidence_k_need(ae, be, cfg: PrecisionConfig) -> jnp.ndarray:
+    """Instantaneous split one site-level observation ``(ae, be)`` demands
+    (headroom included) — the per-issue statistic the tracker grows toward
+    and ``repro.profile``'s autotuner derives its floor/ceiling hints from.
+    Vectorized: feed the whole captured evidence stream at once."""
+    step_hi, step_lo = evidence_bounds(ae, be)
+    return _k_for(step_hi + cfg.headroom, step_lo - cfg.headroom, cfg.fmt)
 
 
 def tracker_observe(
@@ -156,30 +202,23 @@ def tracker_observe(
     apply identical adjust-unit math.
     """
     fmt = cfg.fmt
-
-    def k_for(hi, lo):
-        e = jnp.maximum(
-            _needed_e_bits(hi.astype(jnp.int32), fmt.eb, fmt.fx),
-            _needed_e_bits_lo(lo.astype(jnp.int32), fmt.eb, fmt.fx),
-        )
-        return e - fmt.eb
-
-    ae = jnp.asarray(ae, jnp.float32)
-    be = jnp.asarray(be, jnp.float32)
-    step_hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
-    step_lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
+    step_hi, step_lo = evidence_bounds(ae, be)
 
     hi_ema = cfg.ema * state.hi_ema[site] + (1.0 - cfg.ema) * step_hi
     hi_ema = jnp.maximum(hi_ema, step_hi)  # never smooth away a spike
     lo_ema = cfg.ema * state.lo_ema[site] + (1.0 - cfg.ema) * step_lo
     lo_ema = jnp.minimum(lo_ema, step_lo)
 
-    k_need_now = k_for(step_hi + cfg.headroom, step_lo - cfg.headroom)
-    k_need_ema = k_for(hi_ema + cfg.headroom, lo_ema - cfg.headroom)
+    k_need_now = _k_for(step_hi + cfg.headroom, step_lo - cfg.headroom, fmt)
+    k_need_ema = _k_for(hi_ema + cfg.headroom, lo_ema - cfg.headroom, fmt)
     k_cur = state.k[site]
-    grew = k_need_now > k_cur
     # grow immediately on demand; shrink only toward the persistent-need EMA
     k_new = jnp.maximum(k_need_now, jnp.minimum(k_cur, k_need_ema))
+    if cfg.k_bounds is not None:
+        # the autotuner's floor/ceiling hints (site must be a static index)
+        lo_b, hi_b = cfg.k_bounds[site]
+        k_new = jnp.clip(k_new, lo_b, hi_b)
+    grew = k_new > k_cur
     shrank = k_new < k_cur
 
     return RangeTracker(

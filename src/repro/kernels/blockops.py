@@ -29,20 +29,25 @@ def block_max_exp(t):
     return unbiased_exponent(jnp.maximum(jnp.max(mag), jnp.float32(1e-38)))
 
 
-def rr_mul_block(a, b, fmt, tail_approx, *, exps=None, k_min=None):
+def rr_mul_block(a, b, fmt, tail_approx, *, exps=None, k_min=None, k_fixed=None):
     """Shared-split R2F2 product of two blocks (same-format rule, §4.1).
 
     ``exps`` lets a caller that already reduced the operands (the fused
     plane computes the exponents once for both split selection and tracker
     evidence) pass ``(a_max_exp, b_max_exp)`` instead of re-reducing;
     ``k_min`` floors the selected split at a carried tracker value — the
-    adjust unit's persistent k under which a tracked fused chunk runs.
-    Both default to the original pre-fused-plane behaviour bit-for-bit.
+    adjust unit's persistent k under which a tracked fused chunk runs;
+    ``k_fixed`` bypasses selection entirely and multiplies at exactly that
+    split (the pinned static-deployment emulation — no live widen). All
+    default to the original pre-fused-plane behaviour bit-for-bit.
     """
-    ae, be = exps if exps is not None else (block_max_exp(a), block_max_exp(b))
-    k = select_k(ae, be, fmt)
-    if k_min is not None:
-        k = jnp.maximum(k, jnp.asarray(k_min, jnp.int32))
+    if k_fixed is not None:
+        k = jnp.asarray(k_fixed, jnp.int32)
+    else:
+        ae, be = exps if exps is not None else (block_max_exp(a), block_max_exp(b))
+        k = select_k(ae, be, fmt)
+        if k_min is not None:
+            k = jnp.maximum(k, jnp.asarray(k_min, jnp.int32))
     e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
     aq = quantize_em(a, e_b, m_b)
     bq = quantize_em(b, e_b, m_b)

@@ -50,6 +50,7 @@ from jax.experimental import pallas as pl
 from repro.core.flexformat import quantize_em
 from repro.kernels.blockops import block_max_exp, rr_mul_block
 from repro.precision.fusion import fused_family
+from repro.profile.capture import pair_exp_hist
 
 __all__ = ["on_tpu", "resolve_interpret", "FusedOps", "fused_sweep"]
 
@@ -75,9 +76,15 @@ class FusedOps:
     substep; the builder harvests ``.evidence`` after the body returns.
     """
 
-    __slots__ = ("prec", "sites", "family", "k_floor", "collect", "evidence")
+    __slots__ = (
+        "prec", "sites", "family", "k_floor", "collect", "capture", "valid",
+        "evidence", "counts",
+    )
 
-    def __init__(self, prec, sites: Tuple[str, ...], k_floor=None, collect=False):
+    def __init__(
+        self, prec, sites: Tuple[str, ...], k_floor=None, collect=False,
+        capture=None, valid=None,
+    ):
         self.prec = prec
         self.sites = tuple(sites)
         self.family = fused_family(prec.mode)
@@ -88,7 +95,42 @@ class FusedOps:
             )
         self.k_floor = k_floor  # (n_sites,) int32 carried splits, or None
         self.collect = collect
+        self.capture = capture  # CaptureSpec: widen evidence to binned counts
+        #: (row_ok (br,1)|None, col_ok (1,bw)|None, br, bw) — this block's
+        #: valid-lane masks when the grid is padded; capture counts only
+        #: valid lanes, so pad constants can never contaminate a profile
+        self.valid = valid
         self.evidence = {}  # site -> (a_max_exp, b_max_exp) f32 scalars
+        self.counts = {}  # site -> (2, n_bins) int32 operand exponent counts
+
+    def _valid_mask(self, shape):
+        """Valid-lane mask broadcast to an operand's shape (None: all valid).
+
+        Row padding needs the operand to keep the block's row extent (sweep
+        bodies slice only along width); column padding needs the full block
+        width (elementwise bodies). Anything else cannot be attributed to
+        lanes and is refused at trace time.
+        """
+        if self.valid is None:
+            return None
+        row_ok, col_ok, br, bw = self.valid
+        m = None
+        if row_ok is not None:
+            if len(shape) != 2 or shape[0] != br:
+                raise ValueError(
+                    f"capture on a row-padded grid needs body operands to keep "
+                    f"the block row extent {br}; got shape {shape}"
+                )
+            m = jnp.broadcast_to(row_ok, shape)
+        if col_ok is not None:
+            if len(shape) != 2 or shape[1] != bw:
+                raise ValueError(
+                    f"capture on a width-padded grid needs body operands to "
+                    f"keep the block width {bw}; got shape {shape}"
+                )
+            c = jnp.broadcast_to(col_ok, shape)
+            m = c if m is None else (m & c)
+        return m
 
     def mul(self, a, b, site: str):
         """Product of two blocks on the policy's multiplier at a named site."""
@@ -105,6 +147,8 @@ class FusedOps:
             if site in self.evidence:
                 raise ValueError(f"fused body hit site {site!r} twice in one substep")
             self.evidence[site] = tuple(e.astype(jnp.float32) for e in exps)
+        if self.capture is not None:
+            self.counts[site] = pair_exp_hist(a, b, self.capture, self._valid_mask(shape))
 
         if self.family == "f32":
             return a * b
@@ -114,14 +158,22 @@ class FusedOps:
             e, m = self.prec.fixed_em
             return quantize_em(quantize_em(a, e, m) * quantize_em(b, e, m), e, m)
         # "rr": per-block shared split (same-format rule), grown on demand by
-        # construction and floored at the carried adjust-unit split
+        # construction and floored at the carried adjust-unit split. Under
+        # cfg.pinned the carried split IS the split (static profiled
+        # deployment — no live widen), mirroring the reference plane.
         k_min = None
         if self.k_floor is not None:
             k_min = self.k_floor[self.sites.index(site)]
+        if self.prec.pinned and k_min is not None:
+            return rr_mul_block(
+                a, b, self.prec.fmt, self.prec.tail_approx, exps=exps, k_fixed=k_min
+            )
         return rr_mul_block(a, b, self.prec.fmt, self.prec.tail_approx, exps=exps, k_min=k_min)
 
 
-def _sweep_kernel(*refs, body, prec, sites, steps, n_state, n_out, collect, has_floor):
+def _sweep_kernel(
+    *refs, body, prec, sites, steps, n_state, n_out, collect, capture, has_floor, extent
+):
     state_refs = refs[:n_state]
     pos = n_state
     k_floor = None
@@ -129,16 +181,42 @@ def _sweep_kernel(*refs, body, prec, sites, steps, n_state, n_out, collect, has_
         k_floor = refs[pos][...][0]  # (n_sites,) int32
         pos += 1
     out_refs = refs[pos : pos + n_out]
-    ev_ref = refs[pos + n_out] if collect else None
+    pos += n_out
+    ev_ref = cnt_ref = None
+    if collect:
+        ev_ref = refs[pos]
+        pos += 1
+    if capture is not None:
+        cnt_ref = refs[pos]
 
     state = tuple(r[...] for r in state_refs)
     n_sites = len(sites)
-    # evidence carried functionally through the substep loop, written once
+    # evidence/counts carried functionally through the substep loop, written once
     ev0 = jnp.zeros((steps, n_sites, 2) if collect else (1,), jnp.float32)
+    cnt0 = jnp.zeros(
+        (n_sites, 2, capture.n_bins) if capture is not None else (1,), jnp.int32
+    )
+
+    # valid-lane masks for capture on padded grids: this block's global row/
+    # col positions vs the unpadded extents (static), so pad lanes never count
+    valid = None
+    if capture is not None and extent is not None:
+        rows, width = extent
+        br, bw = state_refs[0].shape
+        row_ok = col_ok = None
+        if rows is not None:
+            pos = pl.program_id(0) * br + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+            row_ok = pos < rows
+        if width is not None:
+            pos = pl.program_id(1) * bw + jax.lax.broadcasted_iota(jnp.int32, (1, bw), 1)
+            col_ok = pos < width
+        valid = (row_ok, col_ok, br, bw)
 
     def substep(s, carry):
-        st, ev = carry
-        ops = FusedOps(prec, sites, k_floor=k_floor, collect=collect)
+        st, ev, cnt = carry
+        ops = FusedOps(
+            prec, sites, k_floor=k_floor, collect=collect, capture=capture, valid=valid
+        )
         new = body(st, ops)
         if not isinstance(new, tuple):
             new = (new,)
@@ -155,23 +233,28 @@ def _sweep_kernel(*refs, body, prec, sites, steps, n_state, n_out, collect, has_
                 ae, be = ops.evidence[name]
                 ev = ev.at[s, j, 0].set(ae)
                 ev = ev.at[s, j, 1].set(be)
-        return new, ev
+        if capture is not None:
+            # the widened evidence: substep counts accumulate over the chunk
+            cnt = cnt + jnp.stack([ops.counts[name] for name in sites])
+        return new, ev, cnt
 
     if steps == 1:
         # single-substep bodies (e.g. an elementwise flux) may return fewer
         # leaves than they take — no loop carry to keep structurally stable
-        state, ev = substep(0, (state, ev0))
+        state, ev, cnt = substep(0, (state, ev0, cnt0))
     else:
         if n_out != n_state:
             raise ValueError(
                 f"multi-substep sweeps need body in/out leaf counts to match "
                 f"({n_state} != {n_out}): the output is the next substep's input"
             )
-        state, ev = jax.lax.fori_loop(0, steps, substep, (state, ev0))
+        state, ev, cnt = jax.lax.fori_loop(0, steps, substep, (state, ev0, cnt0))
     for r, v in zip(out_refs, state):
         r[...] = v
     if collect:
         ev_ref[...] = ev[None, None]  # (1, 1, steps, n_sites, 2) block
+    if capture is not None:
+        cnt_ref[...] = cnt[None, None]  # (1, 1, n_sites, 2, n_bins) block
 
 
 def fused_sweep(
@@ -186,6 +269,7 @@ def fused_sweep(
     pad_values: Optional[Sequence[float]] = None,
     k_floor=None,
     collect_evidence: bool = False,
+    capture=None,
     interpret: Optional[bool] = None,
 ):
     """Run ``steps`` substeps of ``body`` over blocked state in ONE
@@ -209,10 +293,21 @@ def fused_sweep(
         family's per-block selection (tracked modes).
       collect_evidence: also return the per-substep per-site operand
         max-exponent evidence, cross-block maxed: ``(steps, n_sites, 2)``.
+      capture: a :class:`repro.profile.capture.CaptureSpec` widens the
+        evidence stream to binned counts — every policy multiplication's
+        elementwise operand exponents are histogrammed in-VMEM and the
+        per-block counts summed across blocks and substeps, giving
+        ``(n_sites, 2, n_bins) int32`` for the whole chunk. Implies
+        ``collect_evidence`` (the profile consumes both). Pad lanes are
+        masked out of the counts (zero pads by the zero-exponent
+        convention, non-zero pads by the in-kernel valid-lane mask), so a
+        padded grid profiles identically to the reference plane.
 
-    Returns ``(out_leaves_tuple, evidence_or_None)``.
+    Returns ``(out_leaves_tuple, evidence_or_None)``, plus a trailing
+    ``counts`` element when ``capture`` is set.
     """
     interpret = resolve_interpret(interpret)
+    collect_evidence = bool(collect_evidence) or capture is not None
     leaves = [jnp.asarray(x, jnp.float32) for x in state]
     rows, width = leaves[0].shape
     for x in leaves[1:]:
@@ -247,6 +342,12 @@ def fused_sweep(
             pl.BlockSpec((1, 1, steps, n_sites, 2), lambda i, j: (i, j, 0, 0, 0))
         )
         out_shape.append(jax.ShapeDtypeStruct((gi, gj, steps, n_sites, 2), jnp.float32))
+    if capture is not None:
+        nb = capture.n_bins
+        out_specs.append(
+            pl.BlockSpec((1, 1, n_sites, 2, nb), lambda i, j: (i, j, 0, 0, 0))
+        )
+        out_shape.append(jax.ShapeDtypeStruct((gi, gj, n_sites, 2, nb), jnp.int32))
 
     outs = pl.pallas_call(
         functools.partial(
@@ -258,7 +359,9 @@ def fused_sweep(
             n_state=n_state,
             n_out=n_out,
             collect=collect_evidence,
+            capture=capture,
             has_floor=k_floor is not None,
+            extent=(rows if pr else None, width if pw else None) if (pr or pw) else None,
         ),
         grid=(gi, gj),
         in_specs=in_specs,
@@ -268,6 +371,10 @@ def fused_sweep(
     )(*inputs)
 
     outs = list(outs)
+    counts = None
+    if capture is not None:
+        # global counts = sum of per-block counts (blocks partition elements)
+        counts = jnp.sum(outs.pop(), axis=(0, 1), dtype=jnp.int32)
     evidence = None
     if collect_evidence:
         # the global per-substep site evidence is the max over blocks (max of
@@ -276,4 +383,6 @@ def fused_sweep(
         evidence = jnp.max(outs.pop(), axis=(0, 1))
     if pr or pw:
         outs = [o[:rows, :width] for o in outs]
+    if capture is not None:
+        return tuple(outs), evidence, counts
     return tuple(outs), evidence

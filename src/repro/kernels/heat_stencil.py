@@ -57,6 +57,7 @@ def _heat1d_body(alpha, dtodx2, sites):
         "block_rows",
         "sites",
         "collect_evidence",
+        "capture",
         "interpret",
     ),
 )
@@ -71,13 +72,16 @@ def heat1d_sweep(
     sites=HEAT1D_SITES,
     k_floor=None,
     collect_evidence=False,
+    capture=None,
     interpret=None,
 ):
     """Fused-plane entry: advance (rows, nx) rod states ``steps`` substeps.
 
-    Returns ``(u, evidence)`` — the stepper's ``fused_step`` contract.
+    Returns ``(u, evidence)`` — the stepper's ``fused_step`` contract —
+    plus a trailing ``(n_sites, 2, n_bins)`` exponent-count array when a
+    ``capture`` spec is given (range-distribution profiling).
     """
-    (out,), ev = fused.fused_sweep(
+    res = fused.fused_sweep(
         _heat1d_body(float(alpha), float(dtodx2), sites),
         (u0,),
         prec=prec,
@@ -86,8 +90,13 @@ def heat1d_sweep(
         block=(block_rows, u0.shape[1]),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
+        capture=capture,
         interpret=interpret,
     )
+    if capture is not None:
+        (out,), ev, counts = res
+        return out, ev, counts
+    (out,), ev = res
     return out, ev
 
 

@@ -59,7 +59,9 @@ def _heat2d_body(nx, ny, alpha, dtodx2, sites):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("alpha", "dtodx2", "prec", "steps", "sites", "collect_evidence", "interpret"),
+    static_argnames=(
+        "alpha", "dtodx2", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+    ),
 )
 def heat2d_sweep(
     u0,
@@ -71,14 +73,15 @@ def heat2d_sweep(
     sites=HEAT2D_SITES,
     k_floor=None,
     collect_evidence=False,
+    capture=None,
     interpret=None,
 ):
     """Advance a (nx, ny) field ``steps`` 5-point explicit-FD substeps.
 
-    Returns ``(u, evidence)``.
+    Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
     """
     nx, ny = u0.shape
-    (out,), ev = fused.fused_sweep(
+    res = fused.fused_sweep(
         _heat2d_body(nx, ny, float(alpha), float(dtodx2), sites),
         (u0.reshape(1, nx * ny),),
         prec=prec,
@@ -87,8 +90,13 @@ def heat2d_sweep(
         block=(1, nx * ny),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
+        capture=capture,
         interpret=interpret,
     )
+    if capture is not None:
+        (out,), ev, counts = res
+        return out.reshape(nx, ny), ev, counts
+    (out,), ev = res
     return out.reshape(nx, ny), ev
 
 
@@ -112,7 +120,9 @@ def _advection1d_body(speed, dtodx, sites):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("speed", "dtodx", "prec", "steps", "sites", "collect_evidence", "interpret"),
+    static_argnames=(
+        "speed", "dtodx", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+    ),
 )
 def advection1d_sweep(
     u0,
@@ -124,13 +134,14 @@ def advection1d_sweep(
     sites=ADVECTION1D_SITES,
     k_floor=None,
     collect_evidence=False,
+    capture=None,
     interpret=None,
 ):
     """Advance a (nx,) periodic profile ``steps`` upwind substeps.
 
-    Returns ``(u, evidence)``.
+    Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
     """
-    (out,), ev = fused.fused_sweep(
+    res = fused.fused_sweep(
         _advection1d_body(float(speed), float(dtodx), sites),
         (u0[None, :],),
         prec=prec,
@@ -139,8 +150,13 @@ def advection1d_sweep(
         block=(1, u0.shape[0]),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
+        capture=capture,
         interpret=interpret,
     )
+    if capture is not None:
+        (out,), ev, counts = res
+        return out[0], ev, counts
+    (out,), ev = res
     return out[0], ev
 
 
@@ -165,7 +181,9 @@ def _burgers1d_body(dt, dx, sites):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("dt", "dx", "prec", "steps", "sites", "collect_evidence", "interpret"),
+    static_argnames=(
+        "dt", "dx", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+    ),
 )
 def burgers1d_sweep(
     u0,
@@ -177,13 +195,14 @@ def burgers1d_sweep(
     sites=BURGERS1D_SITES,
     k_floor=None,
     collect_evidence=False,
+    capture=None,
     interpret=None,
 ):
     """Advance a (nx,) periodic wave ``steps`` Lax-Friedrichs substeps.
 
-    Returns ``(u, evidence)``.
+    Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
     """
-    (out,), ev = fused.fused_sweep(
+    res = fused.fused_sweep(
         _burgers1d_body(float(dt), float(dx), sites),
         (u0[None, :],),
         prec=prec,
@@ -192,6 +211,11 @@ def burgers1d_sweep(
         block=(1, u0.shape[0]),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
+        capture=capture,
         interpret=interpret,
     )
+    if capture is not None:
+        (out,), ev, counts = res
+        return out[0], ev, counts
+    (out,), ev = res
     return out[0], ev

@@ -52,16 +52,18 @@ def swe_flux_fused(
     sites=SWE_SITES,
     k_floor=None,
     collect_evidence=False,
+    capture=None,
     interpret=None,
 ):
     """Fused-plane entry: momentum flux + per-site evidence over 2D fields.
 
     ``block`` defaults to the policy's ``kernel_blocks[:2]``. Returns
     ``(flux, evidence)`` with evidence shaped ``(1, n_sites, 2)`` (the flux
-    is one substep of a fused chunk).
+    is one substep of a fused chunk), plus a ``(n_sites, 2, n_bins)``
+    exponent-count array when a ``capture`` spec is given.
     """
     block = tuple(prec.kernel_blocks[:2]) if block is None else block
-    (out,), ev = fused.fused_sweep(
+    res = fused.fused_sweep(
         _swe_flux_body(sites),
         (q1, q3),
         prec=prec,
@@ -72,8 +74,13 @@ def swe_flux_fused(
         pad_values=(0.0, 1.0),  # q3 is a divisor: pad finite, range-neutral
         k_floor=k_floor,
         collect_evidence=collect_evidence,
+        capture=capture,
         interpret=interpret,
     )
+    if capture is not None:
+        (out,), ev, counts = res
+        return out, ev, counts
+    (out,), ev = res
     return out, ev
 
 

@@ -86,6 +86,7 @@ class Advection1DStepper(Stepper):
         *,
         k_floor=None,
         collect_evidence: bool = False,
+        capture=None,
         interpret=None,
     ):
         from repro.kernels.pde_steps import advection1d_sweep  # lazy: pallas off cold paths
@@ -99,5 +100,6 @@ class Advection1DStepper(Stepper):
             sites=self.sites,
             k_floor=k_floor,
             collect_evidence=collect_evidence,
+            capture=capture,
             interpret=interpret,
         )

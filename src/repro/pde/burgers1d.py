@@ -83,6 +83,7 @@ class Burgers1DStepper(Stepper):
         *,
         k_floor=None,
         collect_evidence: bool = False,
+        capture=None,
         interpret=None,
     ):
         from repro.kernels.pde_steps import burgers1d_sweep  # lazy: pallas off cold paths
@@ -96,5 +97,6 @@ class Burgers1DStepper(Stepper):
             sites=self.sites,
             k_floor=k_floor,
             collect_evidence=collect_evidence,
+            capture=capture,
             interpret=interpret,
         )

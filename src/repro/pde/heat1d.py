@@ -108,11 +108,12 @@ class Heat1DStepper(Stepper):
         *,
         k_floor=None,
         collect_evidence: bool = False,
+        capture=None,
         interpret=None,
     ):
         from repro.kernels.heat_stencil import heat1d_sweep  # lazy: pallas off cold paths
 
-        out, ev = heat1d_sweep(
+        res = heat1d_sweep(
             u[None, :],
             alpha=cfg.alpha,
             dtodx2=cfg.dtodx2,
@@ -122,8 +123,13 @@ class Heat1DStepper(Stepper):
             sites=self.sites,
             k_floor=k_floor,
             collect_evidence=collect_evidence,
+            capture=capture,
             interpret=interpret,
         )
+        if capture is not None:
+            out, ev, counts = res
+            return out[0], ev, counts
+        out, ev = res
         return out[0], ev
 
 

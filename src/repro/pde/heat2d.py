@@ -122,6 +122,7 @@ class Heat2DStepper(Stepper):
         *,
         k_floor=None,
         collect_evidence: bool = False,
+        capture=None,
         interpret=None,
     ):
         from repro.kernels.pde_steps import heat2d_sweep  # lazy: pallas off cold paths
@@ -135,5 +136,6 @@ class Heat2DStepper(Stepper):
             sites=self.sites,
             k_floor=k_floor,
             collect_evidence=collect_evidence,
+            capture=capture,
             interpret=interpret,
         )

@@ -48,6 +48,7 @@ from repro.core.policy import PrecisionConfig
 from repro.dist.sharding import constrain
 from repro.precision import fold_evidence, fused_eligible, get_engine, site_tracker_init
 from repro.pde.registry import get_stepper
+from repro.profile.capture import CaptureResult, CaptureSpec, pair_exp_hist, site_evidence
 
 __all__ = ["Stepper", "StepOps", "Simulation", "SimResult"]
 
@@ -63,19 +64,46 @@ class StepOps:
     bit-identical to the old per-workload loops.
     """
 
-    __slots__ = ("prec", "tracker", "_engine")
+    __slots__ = (
+        "prec", "tracker", "_engine", "_cap_spec", "_cap_sites", "cap_counts", "cap_evidence",
+    )
 
-    def __init__(self, prec: PrecisionConfig, tracker=None):
+    def __init__(self, prec: PrecisionConfig, tracker=None, capture=None):
         self.prec = prec
         self.tracker = tracker
         self._engine = get_engine(prec)
+        self._cap_spec = None
+        if capture is not None:
+            # (CaptureSpec, site tuple, carried (n_sites, 2, n_bins) counts):
+            # the driver threads the counts through the scan like the tracker
+            self._cap_spec, self._cap_sites, self.cap_counts = capture
+            self.cap_evidence = jnp.full(
+                (len(self._cap_sites), 2), -127.0, jnp.float32
+            )  # per-step site evidence; -127 is the zero-operand floor
 
     def mul(self, a, b, site: str):
         """Elementwise product on the policy's multiplier at a named site."""
+        if self._cap_spec is not None:
+            self._capture(a, b, site)
         out, self.tracker = self._engine.multiply(
             a, b, self.prec, tracker=self.tracker, site=site
         )
         return out
+
+    def _capture(self, a, b, site: str):
+        """Range capture: bin the (broadcast) operands' elementwise exponents
+        and record the site-level max-exponent evidence — the same binning the
+        fused kernels apply in-VMEM (:mod:`repro.profile.capture`)."""
+        j = self._cap_sites.index(site)
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        shape = jnp.broadcast_shapes(a.shape, b.shape)
+        a = jnp.broadcast_to(a, shape)
+        b = jnp.broadcast_to(b, shape)
+        self.cap_counts = self.cap_counts.at[j].add(pair_exp_hist(a, b, self._cap_spec))
+        self.cap_evidence = self.cap_evidence.at[j].set(
+            jnp.maximum(self.cap_evidence[j], site_evidence(a, b))
+        )
 
     def div(self, a, b):
         """Quotient on the substrate divider (R2F2 is a multiplier)."""
@@ -108,11 +136,14 @@ class Stepper:
     #: Optional fused-plane hook, registered alongside ``step``. A stepper
     #: with a fused body overrides this with a method of signature
     #: ``fused_step(state, cfg, prec, steps, *, k_floor=None,
-    #: collect_evidence=False, interpret=None) -> (state, evidence)`` that
-    #: advances ``steps`` substeps through Pallas whole-step kernels
-    #: (:mod:`repro.kernels.fused`) and, when asked, returns the per-substep
-    #: per-site max-exponent evidence ``(steps, len(sites), 2)`` the driver
-    #: folds into the carried tracker. ``None`` means "reference path only".
+    #: collect_evidence=False, capture=None, interpret=None) ->
+    #: (state, evidence)`` that advances ``steps`` substeps through Pallas
+    #: whole-step kernels (:mod:`repro.kernels.fused`) and, when asked,
+    #: returns the per-substep per-site max-exponent evidence
+    #: ``(steps, len(sites), 2)`` the driver folds into the carried tracker.
+    #: With a ``capture`` spec (range profiling, DESIGN.md §11) the return
+    #: grows a trailing ``(len(sites), 2, n_bins)`` exponent-count array.
+    #: ``None`` means "reference path only".
     fused_step = None
 
     def fused_supported(self, cfg, prec: PrecisionConfig) -> bool:
@@ -137,13 +168,21 @@ class Stepper:
         del cfg
         return state
 
+    def metric_offset(self, cfg) -> float:
+        """Constant background removed before rel-L2 metrics (e.g. the SWE
+        resting depth) — used by ``repro.profile``'s validation replay."""
+        del cfg
+        return 0.0
+
 
 class SimResult(NamedTuple):
-    """What a run returns; ``tracker`` is None for untracked modes."""
+    """What a run returns; ``tracker`` is None for untracked modes and
+    ``profile`` is None unless the run captured range distributions."""
 
     state: Any  # final solver state
     snapshots: Any  # stacked observables, leading dim = n snapshots
     tracker: Optional[Any]  # final SiteTracker (tracked modes)
+    profile: Optional[Any] = None  # repro.profile.capture.CaptureResult
 
 
 def _constrain_ensemble(tree):
@@ -207,6 +246,33 @@ class Simulation:
             )
         return execution
 
+    # -- profiling / policy plumbing ----------------------------------------
+
+    def _resolve_capture(self, capture):
+        """``capture`` may be None, True (default spec) or a CaptureSpec."""
+        if capture is None or capture is False:
+            return None
+        if capture is True:
+            capture = CaptureSpec()
+        if not isinstance(capture, CaptureSpec):
+            raise TypeError(f"capture must be bool or CaptureSpec, got {capture!r}")
+        if not self.stepper.sites:
+            raise ValueError(
+                f"stepper {self.stepper.name!r} declares no multiplication "
+                "sites; nothing to capture"
+            )
+        return capture
+
+    def _apply_policy(self, prec, tracker, policy):
+        """Load a ``repro.profile`` PrecisionPolicy artifact: per-site tuned
+        starting splits for the tracker plus the floor/ceiling hints as
+        ``prec.k_bounds`` (ordered by the stepper's site tuple)."""
+        sites = self.stepper.sites
+        prec = policy.apply(prec, sites)
+        if tracker is None and get_engine(prec).tracks and sites:
+            tracker = site_tracker_init(sites, prec.fmt, k0=policy.k_array(sites))
+        return prec, tracker
+
     # -- single run ---------------------------------------------------------
 
     def run(
@@ -217,6 +283,8 @@ class Simulation:
         state0=None,
         tracker=None,
         execution: str = "reference",
+        capture=None,
+        policy=None,
     ) -> SimResult:
         """Advance ``steps`` updates, snapshotting observables periodically.
 
@@ -235,14 +303,27 @@ class Simulation:
           fold the kernels' per-site range evidence into the carried tracker
           between chunks. Raises if the stepper/mode is not fused-eligible.
         * ``"auto"`` — ``"fused"`` when eligible, else ``"reference"``.
+
+        ``capture`` (None | True | :class:`repro.profile.capture.CaptureSpec`)
+        turns on range-distribution capture (DESIGN.md §11): the result's
+        ``profile`` field carries the per-step site evidence stream and the
+        per-site operand exponent histograms, on BOTH execution planes.
+
+        ``policy`` loads a ``repro.profile`` PrecisionPolicy artifact:
+        tracked modes start their tracker at the artifact's per-site tuned
+        splits and clamp re-picks to its floor/ceiling hints. Combine with
+        ``prec.pinned`` for the static profiled-deployment emulation.
         """
         stepper, cfg, prec = self.stepper, self.cfg, self.prec
+        if policy is not None:
+            prec, tracker = self._apply_policy(prec, tracker, policy)
         state0 = stepper.init_state(cfg) if state0 is None else state0
         if tracker is None:
             tracker = self.init_tracker()
+        spec = self._resolve_capture(capture)
         every = snapshot_every or max(1, steps // stepper.snapshots_default)
         if self._resolve_execution(execution) == "fused":
-            return self._run_fused(steps, every, state0, tracker)
+            return self._run_fused(steps, every, state0, tracker, prec=prec, capture=spec)
 
         def body(carry, _):
             state, tr = carry
@@ -255,15 +336,52 @@ class Simulation:
             return carry, stepper.observables(carry[0], cfg)
 
         n_out = steps // every
+        rem = steps - n_out * every
+        if spec is not None:
+            return self._run_reference_captured(
+                steps, every, n_out, rem, state0, tracker, prec, spec
+            )
         carry = (state0, tracker)
         carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
-        rem = steps - n_out * every
         if rem:
             carry, _ = jax.lax.scan(body, carry, None, length=rem)
         state, tracker = carry
         return SimResult(state, snaps, tracker)
 
-    def _run_fused(self, steps: int, every: int, state0, tracker) -> SimResult:
+    def _run_reference_captured(
+        self, steps, every, n_out, rem, state0, tracker, prec, spec
+    ) -> SimResult:
+        """The reference loop with range capture: the exponent-count
+        accumulator rides the scan carry next to the tracker, per-step site
+        evidence is a scan output, and each snapshot interval emits its
+        count delta (the profile's time axis)."""
+        stepper, cfg = self.stepper, self.cfg
+        n_sites = len(stepper.sites)
+        counts0 = jnp.zeros((n_sites, 2, spec.n_bins), jnp.int32)
+
+        def body(carry, _):
+            state, tr, counts = carry
+            ops = StepOps(prec, tr, capture=(spec, stepper.sites, counts))
+            state = stepper.step(state, cfg, ops)
+            return (state, ops.tracker, ops.cap_counts), ops.cap_evidence
+
+        def outer(carry, _):
+            before = carry[2]
+            carry, evs = jax.lax.scan(body, carry, None, length=every)
+            return carry, (stepper.observables(carry[0], cfg), evs, carry[2] - before)
+
+        carry = (state0, tracker, counts0)
+        carry, (snaps, evs, exp_time) = jax.lax.scan(outer, carry, None, length=n_out)
+        evidence = evs.reshape((n_out * every, n_sites, 2))
+        if rem:
+            carry, evs_rem = jax.lax.scan(body, carry, None, length=rem)
+            evidence = jnp.concatenate([evidence, evs_rem], axis=0)
+        state, tracker, exp_total = carry
+        return SimResult(state, snaps, tracker, CaptureResult(evidence, exp_time, exp_total))
+
+    def _run_fused(
+        self, steps: int, every: int, state0, tracker, *, prec=None, capture=None
+    ) -> SimResult:
         """The fused plane's chunked loop: one multi-substep kernel call per
         snapshot interval, tracker evidence folded in between chunks.
 
@@ -271,36 +389,54 @@ class Simulation:
         family's k floor (the adjust unit's persistent format choice); the
         chunk's per-substep evidence then replays through the same
         adjust-unit math the stepwise loop applies
-        (:func:`repro.precision.fold_evidence`).
+        (:func:`repro.precision.fold_evidence`). With ``capture``, the
+        kernels' widened evidence stream (per-site exponent counts) comes
+        back per chunk and assembles into the run's profile.
         """
-        stepper, cfg, prec = self.stepper, self.cfg, self.prec
+        stepper, cfg = self.stepper, self.cfg
+        prec = self.prec if prec is None else prec
 
         def chunk(carry, n):
             state, tr = carry
-            state, ev = stepper.fused_step(
+            res = stepper.fused_step(
                 state,
                 cfg,
                 prec,
                 n,
                 k_floor=None if tr is None else tr.state.k,
-                collect_evidence=tr is not None,
+                # pinned runs never fold evidence, so don't collect it either
+                collect_evidence=capture is not None
+                or (tr is not None and not prec.pinned),
+                capture=capture,
             )
+            state, ev = res[:2]
             if tr is not None:
                 tr = fold_evidence(tr, ev, prec)
-            return state, tr
+            return (state, tr), ev, (res[2] if capture is not None else None)
 
         def outer(carry, _):
-            carry = chunk(carry, every)
-            return carry, stepper.observables(carry[0], cfg)
+            carry, ev, counts = chunk(carry, every)
+            obs = stepper.observables(carry[0], cfg)
+            return carry, (obs if capture is None else (obs, ev, counts))
 
         n_out = steps // every
+        rem = steps - n_out * every
         carry = (state0, tracker)
         carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
-        rem = steps - n_out * every
-        if rem:
-            carry = chunk(carry, rem)
+        profile = None
+        if capture is not None:
+            snaps, evs, exp_time = snaps
+            evidence = evs.reshape((n_out * every, len(stepper.sites), 2))
+            exp_total = jnp.sum(exp_time, axis=0, dtype=jnp.int32)
+            if rem:
+                carry, ev_rem, counts_rem = chunk(carry, rem)
+                evidence = jnp.concatenate([evidence, ev_rem], axis=0)
+                exp_total = exp_total + counts_rem
+            profile = CaptureResult(evidence, exp_time, exp_total)
+        elif rem:
+            carry, _, _ = chunk(carry, rem)
         state, tracker = carry
-        return SimResult(state, snaps, tracker)
+        return SimResult(state, snaps, tracker, profile)
 
     # -- ensembles ----------------------------------------------------------
 
@@ -312,6 +448,8 @@ class Simulation:
         snapshot_every: Optional[int] = None,
         sharded: bool = False,
         execution: str = "reference",
+        capture=None,
+        policy=None,
     ) -> SimResult:
         """Vmapped ensemble over a batch of initial conditions.
 
@@ -322,7 +460,8 @@ class Simulation:
         ``batch`` axis, so inside a ``dist.sharding.axis_rules(mesh)``
         context the ensemble spreads over the mesh's data axes — the
         production-scale path for parameter sweeps and uncertainty
-        quantification.
+        quantification. ``capture``/``policy`` behave as in :meth:`run`,
+        per member (each member gets its own histograms and evidence).
         """
         if sharded:
             state0_batch = _constrain_ensemble(state0_batch)
@@ -332,7 +471,12 @@ class Simulation:
 
         def one(s0):
             return self.run(
-                steps, snapshot_every=snapshot_every, state0=s0, execution=execution
+                steps,
+                snapshot_every=snapshot_every,
+                state0=s0,
+                execution=execution,
+                capture=capture,
+                policy=policy,
             )
 
         res = jax.vmap(one)(state0_batch)

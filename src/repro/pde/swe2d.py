@@ -180,6 +180,7 @@ class SWE2DStepper(Stepper):
         *,
         k_floor=None,
         collect_evidence: bool = False,
+        capture=None,
         interpret=None,
     ):
         """Fused-plane chunk: the substituted momentum-flux equation runs in
@@ -191,27 +192,39 @@ class SWE2DStepper(Stepper):
         from repro.kernels.swe_flux import swe_flux_fused  # lazy: pallas off cold paths
 
         def mom(q1, q3):
-            flux, ev = swe_flux_fused(
+            res = swe_flux_fused(
                 q1,
                 q3,
                 prec=prec,
                 sites=self.sites,
                 k_floor=k_floor,
                 collect_evidence=collect_evidence,
+                capture=capture,
                 interpret=interpret,
             )
-            mom.evidence = ev
+            if capture is not None:
+                flux, mom.evidence, mom.counts = res
+            else:
+                flux, mom.evidence = res
             return flux
 
         def substep(U, _):
             U = _lw_step(U, cfg, mom)
+            if capture is not None:
+                return U, (mom.evidence, mom.counts)
             return U, mom.evidence  # (1, n_sites, 2) per substep, or None
 
-        U, ev_steps = jax.lax.scan(substep, U, None, length=steps)
-        return U, None if ev_steps is None else ev_steps[:, 0]
+        U, ys = jax.lax.scan(substep, U, None, length=steps)
+        if capture is not None:
+            ev_steps, counts = ys
+            return U, ev_steps[:, 0], jnp.sum(counts, axis=0, dtype=jnp.int32)
+        return U, None if ys is None else ys[:, 0]
 
     def observables(self, U, cfg: SWEConfig):
         return U[0]  # snapshot h only
+
+    def metric_offset(self, cfg: SWEConfig) -> float:
+        return cfg.depth  # rel-L2 judges the wave, not the resting basin
 
 
 _STEPPER = SWE2DStepper()

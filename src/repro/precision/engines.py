@@ -263,7 +263,11 @@ class RRTrackedEngine(RRTileEngine):
     tracks = True
 
     def _k_live(self, state, idx, a, b, cfg):
-        """Carried split, grown on demand (the hardware's overflow-retry)."""
+        """Carried split, grown on demand (the hardware's overflow-retry).
+        Under ``cfg.pinned`` the carried split is used verbatim — the static
+        profiled-deployment emulation (no adjust unit in the loop)."""
+        if cfg.pinned:
+            return tracker_k(state, idx)
         return jnp.maximum(tracker_k(state, idx), _shared_k(a, b, cfg))
 
     def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
@@ -274,7 +278,8 @@ class RRTrackedEngine(RRTileEngine):
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         k = self._k_live(state, idx, a, b, cfg)
-        state = tracker_update(state, idx, a, b, cfg)
+        if not cfg.pinned:
+            state = tracker_update(state, idx, a, b, cfg)
         aq, _ = self.prepare_operand(a, cfg, k=k)
         bq, _ = self.prepare_operand(b, cfg, k=k)
         out = jnp.einsum(spec, aq, bq, preferred_element_type=jnp.float32)
@@ -289,7 +294,8 @@ class RRTrackedEngine(RRTileEngine):
             out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
             return out, tracker
         k = self._k_live(state, idx, a, b, cfg)
-        state = tracker_update(state, idx, a, b, cfg)
+        if not cfg.pinned:
+            state = tracker_update(state, idx, a, b, cfg)
         out, _ = r2f2_multiply(a, b, cfg.fmt, k=k, tile_shape=None, tail_approx=cfg.tail_approx)
         return out, rewrap(tracker, state)
 
@@ -303,6 +309,8 @@ class DeployEngine(BF16Engine):
     tracks = True
 
     def _track(self, tracker, site, a, b, cfg):
+        if cfg.pinned:  # static profiled k: bookkeeping stays at the policy's split
+            return tracker
         state, idx = resolve_site(tracker, site)
         if state is not None and idx is not None:
             tracker = rewrap(tracker, tracker_update(state, idx, a, b, cfg))

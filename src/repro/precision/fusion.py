@@ -84,6 +84,8 @@ def fold_evidence(tracker, evidence, cfg: PrecisionConfig):
     """
     if tracker is None:
         return None
+    if cfg.pinned:  # static profiled k: the adjust unit is out of the loop
+        return tracker
     state = tracker.state if isinstance(tracker, SiteTracker) else tracker
     n_sites = evidence.shape[1]
     if len(state.k) != n_sites:

@@ -79,11 +79,10 @@ class SiteTracker:
         return f"SiteTracker(sites={list(self.names)})"
 
 
-def site_tracker_init(
-    names: Sequence[str], fmt: FlexFormat, k0: Optional[int] = None
-) -> SiteTracker:
-    """Fresh tracker with one row per named site (start wide, shrink via
-    redundancy — same convention as :func:`repro.core.policy.tracker_init`)."""
+def site_tracker_init(names: Sequence[str], fmt: FlexFormat, k0=None) -> SiteTracker:
+    """Fresh tracker with one row per named site. ``k0``: scalar or per-site
+    array of starting splits (default: start wide, shrink via redundancy —
+    same convention as :func:`repro.core.policy.tracker_init`)."""
     return SiteTracker(tuple(names), tracker_init(len(names), fmt, k0=k0))
 
 

@@ -1,0 +1,48 @@
+"""repro.profile — range-distribution telemetry, offline analysis, and the
+precision-policy autotuner (DESIGN.md §11).
+
+The paper's deploy scenario assumes a *profiled*, per-site static precision;
+this package is the profile→tune→deploy pipeline that produces it:
+
+1. **capture** (:mod:`~repro.profile.capture`) — per-site exponent
+   histograms + the site-level evidence stream, recorded during
+   ``Simulation.run(..., capture=True)`` on both execution planes;
+2. **analysis** (:mod:`~repro.profile.analysis`) — the offline
+   :class:`RangeProfile`/:class:`RangeReport` pair reproducing the paper's
+   Fig. 3/4 views (dynamic range, exponent spread over time, %% of
+   multiplies representable at each flexible split k);
+3. **autotune** (:mod:`~repro.profile.autotune`) — replays the captured
+   evidence through the adjust-unit law to synthesize a versioned
+   :class:`PrecisionPolicy` artifact (per-site static k for ``deploy``,
+   floor/ceiling hints for ``rr_tracked``), then closes the loop with a
+   validation replay against the f32 oracle before stamping it accepted;
+4. **artifact I/O + CLI** (:mod:`~repro.profile.artifact`,
+   ``python -m repro.profile <stepper>``) — schema-versioned JSON save/load
+   consumed by ``Simulation.run(..., policy=...)`` and
+   ``repro.serve.generate(..., policy=...)``.
+"""
+
+from __future__ import annotations
+
+from .capture import CaptureResult, CaptureSpec, exp_hist, pair_exp_hist, site_evidence
+from .artifact import SCHEMA, SCHEMA_VERSION, PrecisionPolicy
+from .analysis import RangeProfile, RangeReport
+from .autotune import synthesize_policy, tune_policy, validate_policy
+from .pipeline import capture_profile
+
+__all__ = [
+    "CaptureSpec",
+    "CaptureResult",
+    "exp_hist",
+    "pair_exp_hist",
+    "site_evidence",
+    "SCHEMA",
+    "SCHEMA_VERSION",
+    "PrecisionPolicy",
+    "RangeProfile",
+    "RangeReport",
+    "synthesize_policy",
+    "validate_policy",
+    "tune_policy",
+    "capture_profile",
+]

@@ -1,0 +1,150 @@
+"""One-command profile→report→tune→validate→deploy pipeline.
+
+    PYTHONPATH=src python -m repro.profile <stepper> [--steps 400]
+        [--execution both|reference|fused] [--capture-mode f32] [--tol 0.1]
+        [--out artifacts/profile] [--smoke]
+
+End to end, headlessly:
+
+1. capture a range profile of the registered stepper (reference execution,
+   and the fused Pallas plane too under ``--execution both``/``fused``,
+   with a histogram/evidence parity check between the planes);
+2. print the :class:`~repro.profile.analysis.RangeReport`;
+3. synthesize a :class:`~repro.profile.artifact.PrecisionPolicy`;
+4. closed-loop validate it (rr_tracked replay vs the f32 oracle) and stamp;
+5. save the artifact JSON, then **reload it from disk** and run a pinned
+   ``deploy`` simulation under the loaded policy, checking its rel-L2
+   reproduces the one the validation replay recorded.
+
+Exit status 0 only if the artifact was accepted and the deploy replay
+reproduced; 2 otherwise (CI treats this as the profiler smoke gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core.policy import PrecisionConfig
+
+from .analysis import RangeProfile
+from .artifact import PrecisionPolicy
+from .autotune import _rel_l2, synthesize_policy, validate_policy
+from .capture import CaptureSpec
+from .pipeline import capture_profile
+
+
+def _parity(a: RangeProfile, b: RangeProfile) -> bool:
+    return bool(
+        np.array_equal(a.evidence, b.evidence)
+        and np.array_equal(a.exp_total, b.exp_total)
+        and np.array_equal(a.exp_time, b.exp_time)
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.profile")
+    ap.add_argument("stepper", help="registered PDE stepper name (e.g. heat1d)")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--snapshot-every", type=int, default=None)
+    ap.add_argument(
+        "--execution",
+        default="both",
+        choices=("both", "reference", "fused"),
+        help="capture plane(s); 'both' also checks histogram parity",
+    )
+    ap.add_argument(
+        "--capture-mode",
+        default="f32",
+        help="precision mode the profiling run executes under",
+    )
+    ap.add_argument("--tol", type=float, default=0.1, help="validation rel-L2 gate")
+    ap.add_argument("--out", default="artifacts/profile", help="artifact directory")
+    ap.add_argument(
+        "--smoke", action="store_true", help="reduced steps for the CI fast tier"
+    )
+    args = ap.parse_args(argv)
+
+    steps = 64 if args.smoke else args.steps
+    cap_prec = PrecisionConfig(mode=args.capture_mode)
+    spec = CaptureSpec()
+
+    # -- 1. capture ---------------------------------------------------------
+    planes = {"both": ("reference", "fused"), "reference": ("reference",),
+              "fused": ("fused",)}[args.execution]
+    profiles = {}
+    for plane in planes:
+        profiles[plane], _ = capture_profile(
+            args.stepper, steps=steps, prec=cap_prec, execution=plane,
+            snapshot_every=args.snapshot_every, spec=spec,
+        )
+        print(f"[profile] captured {args.stepper} ({steps} steps, {plane} execution)")
+    if len(profiles) == 2:
+        ok = _parity(profiles["reference"], profiles["fused"])
+        print(f"[profile] reference/fused histogram+evidence parity: "
+              f"{'EXACT' if ok else 'MISMATCH'}")
+        if not ok:
+            return 2
+    profile = profiles[planes[0]]
+
+    # -- 2. report ----------------------------------------------------------
+    report = profile.report()
+    print()
+    print(report.summary())
+    print()
+
+    # -- 3./4. tune + validate ---------------------------------------------
+    policy = synthesize_policy(profile)
+    stamp = validate_policy(
+        policy, steps=steps, tol=args.tol, snapshot_every=args.snapshot_every
+    )
+    print(f"[tune] per-site splits: "
+          + ", ".join(f"{n}: k={d['k']} [{d['k_lo']},{d['k_hi']}]"
+                      for n, d in policy.sites.items()))
+    print(f"[validate] rr_tracked rel-L2 {stamp['rel_l2_tracked']:.3e} | "
+          f"static@k_hi rel-L2 {stamp['rel_l2_static']:.3e} (tol {args.tol}) | "
+          f"deploy rel-L2 {stamp['rel_l2_deploy']:.3e} | "
+          f"{'ACCEPTED' if stamp['accepted'] else 'REJECTED'}")
+
+    # -- 5. save, reload, re-deploy ----------------------------------------
+    path = os.path.join(args.out, f"{args.stepper}_policy.json")
+    policy.save(path)
+    report_path = os.path.join(args.out, f"{args.stepper}_report.json")
+    with open(report_path, "w") as f:
+        json.dump(report.to_dict(), f, indent=2, sort_keys=True, default=str)
+    print(f"[artifact] wrote {path} and {report_path}")
+
+    loaded = PrecisionPolicy.load(path)
+    from repro.pde.solver import Simulation  # lazy: keep module import light
+
+    deploy_prec = PrecisionConfig(
+        mode="deploy", fmt=loaded.fmt, ema=loaded.ema, headroom=loaded.headroom,
+        pinned=True,
+    )
+    sim = Simulation(args.stepper, None, deploy_prec)
+    res = sim.run(steps, snapshot_every=args.snapshot_every, policy=loaded)
+    oracle = Simulation(args.stepper, None, PrecisionConfig(mode="f32", fmt=loaded.fmt))
+    ref = oracle.run(steps, snapshot_every=args.snapshot_every)
+    offset = sim.stepper.metric_offset(sim.cfg)
+    rel = _rel_l2(
+        sim.stepper.observables(res.state, sim.cfg),
+        sim.stepper.observables(ref.state, sim.cfg),
+        offset,
+    )
+    recorded = loaded.validation["rel_l2_deploy"]
+    reproduced = abs(rel - recorded) <= 1e-12 * max(1.0, abs(recorded))
+    ks = {n: int(res.tracker.k(n)) for n in res.tracker.names} if res.tracker else {}
+    print(f"[deploy] pinned run under loaded artifact: rel-L2 {rel:.3e} "
+          f"(validation recorded {recorded:.3e}) — "
+          f"{'REPRODUCED' if reproduced else 'DRIFTED'} | static splits {ks}")
+
+    return 0 if (stamp["accepted"] and reproduced) else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+"""Offline range analysis — the paper's Fig. 3/4 views from a captured run.
+
+:class:`RangeProfile` is the host-side (numpy) form of a capture: the
+evidence stream, the exponent histograms, and the run context (stepper,
+sites, precision, execution plane). :class:`RangeReport` derives the views
+the paper builds its precision argument on:
+
+* **dynamic range** per site/operand — occupied exponent span of every
+  value that flowed through the multiplier (Fig. 3's distributions);
+* **exponent spread over simulation time** — per-snapshot-interval occupied
+  spans, showing the drift that makes a static format fail late (heat's
+  flux sinking toward the subnormal floor, Burgers' post-shock collapse);
+* **representability** — % of multiplication issues whose instantaneous
+  need ``k_need`` (the adjust-unit statistic,
+  :func:`repro.core.policy.evidence_k_need`) is covered at each flexible
+  split ``k``, i.e. the fraction of multiplies a static ``E(EB+k)`` format
+  computes without an adjust event (Fig. 4's flexible-split trade-off).
+
+Pure numpy — nothing here traces or jits; it consumes arrays the capture
+layer already materialized.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import PrecisionConfig, evidence_k_need
+
+from .capture import CaptureResult, CaptureSpec
+
+__all__ = ["RangeProfile", "RangeReport"]
+
+
+class RangeProfile:
+    """A captured run, hosted: numpy arrays + static context."""
+
+    def __init__(
+        self,
+        stepper: str,
+        sites: Tuple[str, ...],
+        spec: CaptureSpec,
+        prec: PrecisionConfig,
+        steps: int,
+        execution: str,
+        result: CaptureResult,
+    ):
+        self.stepper = stepper
+        self.sites = tuple(sites)
+        self.spec = spec
+        self.prec = prec
+        self.steps = int(steps)
+        self.execution = execution
+        self.evidence = np.asarray(result.evidence, np.float32)
+        self.exp_time = np.asarray(result.exp_time, np.int64)
+        self.exp_total = np.asarray(result.exp_total, np.int64)
+        n_sites = len(self.sites)
+        if self.evidence.shape[1:] != (n_sites, 2):
+            raise ValueError(
+                f"evidence shape {self.evidence.shape} does not match "
+                f"{n_sites} sites"
+            )
+        if self.exp_total.shape != (n_sites, 2, spec.n_bins):
+            raise ValueError(
+                f"exp_total shape {self.exp_total.shape} != "
+                f"{(n_sites, 2, spec.n_bins)}"
+            )
+
+    def site_index(self, name: str) -> int:
+        try:
+            return self.sites.index(name)
+        except ValueError:
+            raise KeyError(f"unknown site {name!r}; profiled: {self.sites}") from None
+
+    def report(self) -> "RangeReport":
+        return RangeReport(self)
+
+
+def _occupied_span(counts, spec: CaptureSpec) -> Optional[Tuple[int, int]]:
+    """(min_exp, max_exp) of the occupied bins, or None if nothing counted."""
+    (occ,) = np.nonzero(counts)
+    if occ.size == 0:
+        return None
+    return int(occ[0] + spec.e_lo), int(occ[-1] + spec.e_lo)
+
+
+class RangeReport:
+    """Derived per-site statistics over a :class:`RangeProfile`."""
+
+    def __init__(self, profile: RangeProfile):
+        self.profile = profile
+        p = profile
+        fx = p.prec.fmt.fx
+        # per-issue instantaneous need, the adjust unit's own statistic
+        self.k_need = np.asarray(
+            evidence_k_need(p.evidence[..., 0], p.evidence[..., 1], p.prec), np.int32
+        )  # (steps, n_sites); saturates at FX like the hardware
+        self.sites: Dict[str, Dict[str, Any]] = {}
+        for j, name in enumerate(p.sites):
+            per_op = [_occupied_span(p.exp_total[j, s], p.spec) for s in (0, 1)]
+            both = p.exp_total[j].sum(axis=0)
+            span = _occupied_span(both, p.spec)
+            kn = self.k_need[:, j]
+            coverage = {
+                int(k): float(np.mean(kn <= k)) for k in range(fx + 1)
+            }  # % of issues a static split k covers without an adjust event
+            spread = [
+                _occupied_span(p.exp_time[t, j].sum(axis=0), p.spec)
+                for t in range(p.exp_time.shape[0])
+            ]
+            self.sites[name] = {
+                "values_counted": int(both.sum()),
+                "exp_span": span,
+                "exp_span_a": per_op[0],
+                "exp_span_b": per_op[1],
+                "dynamic_range_bits": None if span is None else span[1] - span[0] + 1,
+                "k_need_min": int(kn.min()),
+                "k_need_max": int(kn.max()),
+                "k_need_final": int(kn[-1]),
+                "coverage_at_k": coverage,
+                "spread_over_time": spread,
+            }
+
+    def to_dict(self) -> Dict[str, Any]:
+        p = self.profile
+        return {
+            "stepper": p.stepper,
+            "execution": p.execution,
+            "capture_mode": p.prec.mode,
+            "steps": p.steps,
+            "fmt": str(p.prec.fmt),
+            "sites": self.sites,
+        }
+
+    def summary(self) -> str:
+        """Human-readable per-site table (the CLI's report body)."""
+        p = self.profile
+        fx = p.prec.fmt.fx
+        lines = [
+            f"range profile: {p.stepper} | {p.steps} steps | "
+            f"mode={p.prec.mode} | execution={p.execution} | fmt={p.prec.fmt}",
+            f"{'site':<16} {'values':>10} {'exp span':>12} {'k_need':>9} "
+            + " ".join(f"cov@k={k}" for k in range(fx + 1)),
+        ]
+        for name, s in self.sites.items():
+            span = s["exp_span"]
+            span_s = "-" if span is None else f"[{span[0]},{span[1]}]"
+            cov = " ".join(
+                f"{100.0 * s['coverage_at_k'][k]:6.1f}%" for k in range(fx + 1)
+            )
+            lines.append(
+                f"{name:<16} {s['values_counted']:>10} {span_s:>12} "
+                f"{s['k_need_min']}..{s['k_need_max']:<6} {cov}"
+            )
+            first, last = s["spread_over_time"][0], s["spread_over_time"][-1]
+            lines.append(
+                f"{'':<16} spread over time: first interval {first} -> last {last}"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,154 @@
+"""PrecisionPolicy artifacts — the profile subsystem's durable output.
+
+A policy is the paper's deploy story made reproducible: per-site flexible
+splits derived from an observed range profile, written as a schema-versioned
+JSON file that survives the run that produced it. Consumers:
+
+* ``Simulation.run(..., policy=...)`` — tracked PDE runs start their
+  SiteTracker at the artifact's per-site ``k`` and clamp re-picks to the
+  ``[k_lo, k_hi]`` hints (``PrecisionConfig.k_bounds``);
+* ``Simulation.run(..., policy=..., prec=<pinned deploy>)`` — the static
+  profiled-deployment emulation (no adjust unit in the loop);
+* ``repro.serve.generate(..., policy=...)`` — the LM serving path loads the
+  same format (site names differ; the artifact is the contract).
+
+Schema stability: ``schema``/``schema_version`` are checked on load; older
+minor payload additions must keep existing keys, and a major change bumps
+``SCHEMA_VERSION`` (load refuses newer-than-supported artifacts loudly
+instead of misreading them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.flexformat import FlexFormat
+from repro.core.policy import PrecisionConfig
+
+__all__ = ["SCHEMA", "SCHEMA_VERSION", "PrecisionPolicy"]
+
+SCHEMA = "repro.profile/policy"
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """Per-site static precision derived from a range profile.
+
+    ``sites`` maps site name -> ``{"k", "k_lo", "k_hi"}``: ``k`` is the
+    split the adjust unit converged to under the profiled evidence (the
+    deploy default), ``k_lo``/``k_hi`` are the min/max instantaneous need
+    observed across the run (the rr_tracked floor/ceiling hints — a static
+    build that must survive the whole run uses ``k_hi``).
+    """
+
+    stepper: str
+    fmt: FlexFormat
+    sites: Dict[str, Dict[str, int]]
+    ema: float = 0.95
+    headroom: int = 1
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    validation: Optional[Dict[str, Any]] = None
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def accepted(self) -> bool:
+        """Did the closed-loop validation replay stamp this artifact?"""
+        return bool(self.validation and self.validation.get("accepted"))
+
+    @property
+    def site_names(self) -> Tuple[str, ...]:
+        return tuple(self.sites)
+
+    def _site(self, name: str) -> Dict[str, int]:
+        try:
+            return self.sites[name]
+        except KeyError:
+            raise KeyError(
+                f"policy for {self.stepper!r} has no site {name!r}; "
+                f"covered sites: {list(self.sites)}"
+            ) from None
+
+    def k_array(self, sites: Optional[Sequence[str]] = None) -> np.ndarray:
+        """Per-site tuned splits, ordered like ``sites`` (default: the
+        artifact's own order) — a tracker's ``k0``."""
+        names = self.site_names if sites is None else tuple(sites)
+        return np.asarray([self._site(n)["k"] for n in names], np.int32)
+
+    def bounds(self, sites: Optional[Sequence[str]] = None) -> Tuple[Tuple[int, int], ...]:
+        """Per-site ``(k_lo, k_hi)`` hints for ``PrecisionConfig.k_bounds``."""
+        names = self.site_names if sites is None else tuple(sites)
+        return tuple((self._site(n)["k_lo"], self._site(n)["k_hi"]) for n in names)
+
+    def apply(self, prec: PrecisionConfig, sites: Optional[Sequence[str]] = None) -> PrecisionConfig:
+        """Config with this policy's floor/ceiling hints installed (ordered
+        by ``sites`` — must match the tracker row order the run will use).
+        Refuses a format mismatch: a policy tuned for one ``<EB,MB,FX>``
+        says nothing about another."""
+        if prec.fmt != self.fmt:
+            raise ValueError(
+                f"policy was profiled for fmt {self.fmt} but the run uses "
+                f"{prec.fmt}; re-profile or match the format"
+            )
+        return dataclasses.replace(prec, k_bounds=self.bounds(sites))
+
+    # -- (de)serialization --------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": SCHEMA,
+            "schema_version": SCHEMA_VERSION,
+            "stepper": self.stepper,
+            "fmt": {"eb": self.fmt.eb, "mb": self.fmt.mb, "fx": self.fmt.fx},
+            "ema": self.ema,
+            "headroom": self.headroom,
+            "sites": {
+                n: {k: int(v) for k, v in d.items()} for n, d in self.sites.items()
+            },
+            "meta": self.meta,
+            "validation": self.validation,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PrecisionPolicy":
+        if d.get("schema") != SCHEMA:
+            raise ValueError(f"not a {SCHEMA} artifact: schema={d.get('schema')!r}")
+        ver = d.get("schema_version")
+        if not isinstance(ver, int) or ver < 1 or ver > SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported {SCHEMA} schema_version {ver!r} "
+                f"(this build reads <= {SCHEMA_VERSION})"
+            )
+        fmt = d["fmt"]
+        return cls(
+            stepper=d["stepper"],
+            fmt=FlexFormat(int(fmt["eb"]), int(fmt["mb"]), int(fmt["fx"])),
+            sites={n: {k: int(v) for k, v in s.items()} for n, s in d["sites"].items()},
+            ema=float(d.get("ema", 0.95)),
+            headroom=int(d.get("headroom", 1)),
+            meta=dict(d.get("meta") or {}),
+            validation=d.get("validation"),
+        )
+
+    def save(self, path: str) -> str:
+        """Write the artifact (parent dirs created); returns ``path``."""
+        payload = self.to_dict()
+        payload.setdefault("meta", {}).setdefault("created_unix", time.time())
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PrecisionPolicy":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))

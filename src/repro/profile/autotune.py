@@ -1,0 +1,214 @@
+"""Policy synthesis + closed-loop validation — profile in, artifact out.
+
+The synthesizer does NOT invent a new precision law: it replays the
+captured evidence stream through the very adjust-unit math the runtime
+tracker applies (:func:`repro.precision.fold_evidence` →
+:func:`repro.core.policy.tracker_observe`), so the tuned per-site ``k`` is
+*by construction* the split an ``rr_tracked`` run over the same evidence
+converges to. Around it, the instantaneous-need extremes
+(:func:`repro.core.policy.evidence_k_need`) become the floor/ceiling hints:
+``k_hi`` is what a static no-adjust-unit build must provision, ``k_lo`` is
+the narrowest split the run ever tolerated.
+
+Validation closes the loop (the paper's deploy contract): before an
+artifact is stamped ``accepted``, the stepper re-runs under the synthesized
+policy — ``rr_tracked`` seeded and clamped by the artifact (flexible-format
+arithmetic actually exercising the tuned splits) — and its rel-L2 against
+the f32 oracle must clear the tolerance. A pinned ``deploy`` replay is
+recorded alongside (the MXU-rate proxy a production run will reproduce
+bit-for-bit from the same artifact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionConfig, evidence_k_need, tracker_init
+from repro.precision import fold_evidence, site_tracker_init
+
+from .analysis import RangeProfile
+from .artifact import PrecisionPolicy
+
+__all__ = ["synthesize_policy", "validate_policy", "tune_policy"]
+
+
+def synthesize_policy(profile: RangeProfile, prec: Optional[PrecisionConfig] = None) -> PrecisionPolicy:
+    """Convert a range profile into a (not yet validated) PrecisionPolicy.
+
+    ``prec`` supplies the target format and adjust-unit constants
+    (``fmt``/``ema``/``headroom``); defaults to the profile's own capture
+    config. Per site:
+
+    * ``k``   — final split after replaying the whole evidence stream
+      through the adjust-unit law from the standard wide start;
+    * ``k_lo``/``k_hi`` — min/max instantaneous need over the run.
+    """
+    prec = profile.prec if prec is None else prec
+    base = dataclasses.replace(prec, k_bounds=None, pinned=False)
+    n_sites = len(profile.sites)
+    ev = jnp.asarray(profile.evidence, jnp.float32)
+
+    state = fold_evidence(tracker_init(n_sites, base.fmt), ev, base)
+    k = np.asarray(state.k, np.int64)
+    k_need = np.asarray(evidence_k_need(ev[..., 0], ev[..., 1], base), np.int64)
+    k_hi = np.maximum(k_need.max(axis=0), k)  # converged k never exceeds max
+    k_lo = np.minimum(k_need.min(axis=0), k)  # need, but keep the invariant
+    sites = {
+        name: {"k": int(k[j]), "k_lo": int(k_lo[j]), "k_hi": int(k_hi[j])}
+        for j, name in enumerate(profile.sites)
+    }
+    return PrecisionPolicy(
+        stepper=profile.stepper,
+        fmt=base.fmt,
+        sites=sites,
+        ema=base.ema,
+        headroom=base.headroom,
+        meta={
+            "created_unix": time.time(),
+            "profile": {
+                "steps": profile.steps,
+                "execution": profile.execution,
+                "capture_mode": profile.prec.mode,
+                "spec": {"e_lo": profile.spec.e_lo, "e_hi": profile.spec.e_hi},
+            },
+            "adjust_counters": {
+                "overflow_steps": [int(x) for x in np.asarray(state.overflow_steps)],
+                "shrink_steps": [int(x) for x in np.asarray(state.shrink_steps)],
+            },
+        },
+    )
+
+
+def _rel_l2(obs, ref, offset: float) -> float:
+    obs = np.asarray(obs, np.float64) - offset
+    ref = np.asarray(ref, np.float64) - offset
+    denom = max(float(np.linalg.norm(ref)), 1e-30)
+    return float(np.linalg.norm(obs - ref) / denom)
+
+
+def validate_policy(
+    policy: PrecisionPolicy,
+    cfg=None,
+    *,
+    steps: int,
+    tol: float = 0.1,
+    execution: str = "reference",
+    snapshot_every: Optional[int] = None,
+) -> Dict[str, Any]:
+    """Closed-loop validation replay; stamps ``policy.validation`` in place
+    and returns the stamp.
+
+    Four runs of ``policy.stepper`` over ``steps``, judged against the f32
+    oracle:
+
+    * ``rr_tracked`` seeded+clamped by the policy — the *dynamic* gate
+      (flexible-format arithmetic with the tuned splits in the loop);
+    * ``rr_tracked`` **pinned at the artifact's** ``k_hi`` — the *static*
+      gate: a build without the adjust unit provisions the ceiling hint,
+      and its per-multiply retry net is gone, so an under-provisioned
+      ceiling shows up here as overflow/NaN instead of being silently
+      rescued by the live widen;
+    * pinned ``deploy`` under the policy — the MXU-rate proxy, whose rel-L2
+      is recorded for the deploy-time reproducibility check.
+    """
+    from repro.pde.solver import Simulation  # lazy: no pde import at module scope
+
+    def run(prec, policy_arg, tracker=None):
+        sim = Simulation(policy.stepper, cfg, prec)
+        res = sim.run(
+            steps,
+            snapshot_every=snapshot_every,
+            execution=execution,
+            policy=policy_arg,
+            tracker=tracker,
+        )
+        return sim, res
+
+    sim, ref = run(PrecisionConfig(mode="f32", fmt=policy.fmt), None)
+    offset = sim.stepper.metric_offset(sim.cfg)
+    ref_obs = sim.stepper.observables(ref.state, sim.cfg)
+
+    base = PrecisionConfig(
+        mode="rr_tracked", fmt=policy.fmt, ema=policy.ema, headroom=policy.headroom
+    )
+    _, tracked = run(base, policy)
+    tracked_obs = sim.stepper.observables(tracked.state, sim.cfg)
+    rel_tracked = _rel_l2(tracked_obs, ref_obs, offset)
+
+    sites = sim.stepper.sites
+    k_hi = np.asarray([policy.sites[n]["k_hi"] for n in sites], np.int32)
+    static_tr = site_tracker_init(sites, policy.fmt, k0=k_hi)
+    _, static = run(dataclasses.replace(base, pinned=True), None, tracker=static_tr)
+    static_obs = sim.stepper.observables(static.state, sim.cfg)
+    rel_static = _rel_l2(static_obs, ref_obs, offset)
+
+    deploy_prec = dataclasses.replace(base, mode="deploy", pinned=True)
+    _, deploy = run(deploy_prec, policy)
+    deploy_obs = sim.stepper.observables(deploy.state, sim.cfg)
+    rel_deploy = _rel_l2(deploy_obs, ref_obs, offset)
+
+    finite = bool(
+        np.isfinite(np.asarray(tracked_obs)).all()
+        and np.isfinite(np.asarray(static_obs)).all()
+        and np.isfinite(np.asarray(deploy_obs)).all()
+    )
+    ok = finite and rel_tracked <= tol and rel_static <= tol
+    stamp = {
+        "accepted": bool(ok),
+        "tol": tol,
+        "oracle": "f32",
+        "steps": steps,
+        "execution": execution,
+        "snapshot_every": snapshot_every,
+        "rel_l2_tracked": rel_tracked,
+        "rel_l2_static": rel_static,
+        "rel_l2_deploy": rel_deploy,
+        "finite": finite,
+        "validated_unix": time.time(),
+    }
+    policy.validation = stamp
+    return stamp
+
+
+def tune_policy(
+    stepper,
+    cfg=None,
+    *,
+    steps: int,
+    prec: Optional[PrecisionConfig] = None,
+    capture_prec: Optional[PrecisionConfig] = None,
+    execution: str = "reference",
+    snapshot_every: Optional[int] = None,
+    tol: float = 0.1,
+    validate: bool = True,
+):
+    """Capture → synthesize → validate, in one call.
+
+    ``capture_prec`` is the mode the profiling run executes under (default
+    f32 — the oracle trajectory); ``prec`` supplies the target format and
+    adjust constants for synthesis (default: same as capture). Returns
+    ``(profile, report, policy)`` with ``policy.validation`` stamped when
+    ``validate``.
+    """
+    from .pipeline import capture_profile
+
+    profile, _ = capture_profile(
+        stepper,
+        cfg,
+        steps=steps,
+        prec=capture_prec,
+        execution=execution,
+        snapshot_every=snapshot_every,
+    )
+    policy = synthesize_policy(profile, prec)
+    if validate:
+        validate_policy(
+            policy, cfg, steps=steps, tol=tol, execution=execution,
+            snapshot_every=snapshot_every,
+        )
+    return profile, profile.report(), policy

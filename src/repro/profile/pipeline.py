@@ -1,0 +1,56 @@
+"""Capture driver: one call from stepper name to hosted RangeProfile.
+
+Thin glue over ``repro.pde.solver.Simulation`` — the capture itself lives
+in the solver loops and the fused kernels; this module just runs a
+simulation with capture on and hosts the result. PDE imports are lazy so
+``repro.profile`` stays importable from low-level modules (the fused kernel
+builder imports the capture primitives at module scope).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.policy import PrecisionConfig
+
+from .analysis import RangeProfile
+from .capture import CaptureSpec
+
+__all__ = ["capture_profile"]
+
+
+def capture_profile(
+    stepper,
+    cfg=None,
+    *,
+    steps: int,
+    prec: Optional[PrecisionConfig] = None,
+    execution: str = "reference",
+    snapshot_every: Optional[int] = None,
+    spec: Optional[CaptureSpec] = None,
+    state0=None,
+) -> Tuple[RangeProfile, "SimResult"]:  # noqa: F821 — lazy pde import
+    """Run ``steps`` of a registered stepper with range capture on.
+
+    ``prec`` defaults to f32 — profile the oracle trajectory — but any mode
+    works (profiling under ``rr_tracked`` observes exactly the evidence the
+    adjust unit saw, which is what the autotuner's convergence-match
+    guarantee is stated against). Returns ``(RangeProfile, SimResult)`` so
+    callers keep the run's final state/tracker alongside the profile.
+    """
+    from repro.pde.solver import Simulation  # lazy: no pde import at module scope
+
+    prec = PrecisionConfig(mode="f32") if prec is None else prec
+    spec = CaptureSpec() if spec is None else spec
+    sim = Simulation(stepper, cfg, prec)
+    res = sim.run(
+        steps,
+        snapshot_every=snapshot_every,
+        state0=state0,
+        execution=execution,
+        capture=spec,
+    )
+    profile = RangeProfile(
+        sim.stepper.name, sim.stepper.sites, spec, prec, steps, execution, res.profile
+    )
+    return profile, res

@@ -5,6 +5,16 @@ decode_32k / long_500k cells; this module adds the host-side loop and a
 minimal static-batch scheduler (requests padded to the batch; finished
 sequences keep decoding into a sink — the standard static-batching serving
 baseline, which the dry-run's KV sharding story is built around).
+
+Deploy serving consumes the same :class:`repro.profile.PrecisionPolicy`
+artifact format the PDE steppers profile and validate: pass ``policy=`` (an
+object or a JSON path) and the serving precision is derived from the
+artifact — its ``<EB,MB,FX>`` format, gated on the artifact having passed
+its closed-loop validation — instead of implicit engine defaults. The
+artifact's per-site ``[k_lo, k_hi]`` hints are keyed by *its* site names
+and only apply where a consumer threads a tracker with matching sites, so
+they are deliberately NOT installed here (serving threads no tracker; a
+positional install against foreign site names would clamp the wrong rows).
 """
 
 from __future__ import annotations
@@ -19,7 +29,32 @@ from repro.precision import PrecisionConfig
 from repro.models.config import ModelConfig
 from repro.train.step import make_serve_step
 
-__all__ = ["generate"]
+__all__ = ["generate", "resolve_policy"]
+
+
+def resolve_policy(prec: PrecisionConfig, policy, require_accepted: bool = True):
+    """Derive the serving precision from a PrecisionPolicy artifact.
+
+    ``policy``: a ``repro.profile.PrecisionPolicy`` or a path to its JSON.
+    Returns ``(prec, policy)`` — the config re-based on the artifact's
+    format. Refuses artifacts whose closed-loop validation never accepted
+    them (``require_accepted=False`` opts out, e.g. for dry-runs). The
+    per-site hints stay on the returned artifact for consumers that thread
+    a tracker whose site names match (see module docstring).
+    """
+    from repro.profile import PrecisionPolicy  # lazy: serving paths stay light
+
+    if isinstance(policy, str):
+        policy = PrecisionPolicy.load(policy)
+    if require_accepted and not policy.accepted:
+        raise ValueError(
+            f"policy artifact for {policy.stepper!r} was never accepted by a "
+            "validation replay; re-run `python -m repro.profile` or pass "
+            "require_accepted=False"
+        )
+    import dataclasses
+
+    return dataclasses.replace(prec, fmt=policy.fmt), policy
 
 
 def generate(
@@ -31,8 +66,15 @@ def generate(
     max_len: Optional[int] = None,
     window: Optional[int] = None,
     eos_id: Optional[int] = None,
+    policy=None,
 ):
-    """Greedy generation. Returns (B, max_new_tokens) int32."""
+    """Greedy generation. Returns (B, max_new_tokens) int32.
+
+    ``policy``: optional PrecisionPolicy artifact (object or JSON path) the
+    serving precision is derived from (see :func:`resolve_policy`).
+    """
+    if policy is not None:
+        prec, _ = resolve_policy(prec, policy)
     B, S = prompts.shape
     max_len = max_len or (S + max_new_tokens)
 

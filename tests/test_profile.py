@@ -1,0 +1,402 @@
+"""The repro.profile subsystem (DESIGN.md §11): histogram capture parity
+between the reference and fused execution planes, artifact round-trips and
+re-deploy bit-stability under jit, autotune convergence against the live
+adjust unit, the closed validation loop, and policy consumption by
+Simulation and the serving path."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import PRESETS, PrecisionConfig
+from repro.pde import Simulation
+from repro.pde.advection1d import AdvectionConfig
+from repro.pde.burgers1d import BurgersConfig
+from repro.pde.heat1d import HeatConfig
+from repro.pde.heat2d import Heat2DConfig
+from repro.pde.swe2d import SWEConfig
+from repro.profile import (
+    CaptureSpec,
+    PrecisionPolicy,
+    capture_profile,
+    synthesize_policy,
+    tune_policy,
+    validate_policy,
+)
+from repro.profile.capture import pair_exp_hist
+
+TRACKED = dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked")
+BUILTINS = ("advection1d", "burgers1d", "heat1d", "heat2d", "swe2d")
+
+#: small shapes (same convention as tests/test_fused.py): every default
+#: kernel block covers the whole field, so the fused plane histograms the
+#: exact same operand elements as the reference loop — no pad lanes
+SMALL = {
+    "heat1d": HeatConfig(nx=64),
+    "heat2d": Heat2DConfig(nx=24, ny=24),
+    "advection1d": AdvectionConfig(nx=128),
+    "burgers1d": BurgersConfig(nx=128),
+    "swe2d": SWEConfig(nx=32, ny=32),
+}
+
+
+# ---------------------------------------------------------------------------
+# capture: parity between planes, non-perturbation, ensemble batching
+# ---------------------------------------------------------------------------
+
+
+class TestCapture:
+    @pytest.mark.parametrize("name", BUILTINS)
+    def test_histogram_parity_reference_vs_fused(self, name):
+        """The fused kernels' widened evidence stream (binned counts summed
+        across blocks and substeps) must equal the reference loop's
+        elementwise binning exactly — same multiplies, same exponents —
+        on every registered stepper, remainder chunk included (38 steps
+        never divides the snapshot cadence evenly)."""
+        ref, _ = capture_profile(name, SMALL[name], steps=38, execution="reference")
+        fus, _ = capture_profile(name, SMALL[name], steps=38, execution="fused")
+        np.testing.assert_array_equal(ref.evidence, fus.evidence)
+        np.testing.assert_array_equal(ref.exp_time, fus.exp_time)
+        np.testing.assert_array_equal(ref.exp_total, fus.exp_total)
+        assert ref.exp_total.sum() > 0
+        # whole intervals live in the time axis; the total also covers the
+        # remainder steps, so it dominates the time-axis sum
+        assert (ref.exp_total >= ref.exp_time.sum(axis=0)).all()
+
+    def test_histogram_parity_survives_kernel_padding(self):
+        """A SWE grid that does NOT divide the kernel block (139 > 128 rows
+        at the staggered midpoints) pads q3 with 1.0 — a non-zero constant
+        that must be masked out of the fused counts, or the profile reports
+        pad lanes as data."""
+        cfg = SWEConfig(nx=140, ny=32)
+        ref, _ = capture_profile("swe2d", cfg, steps=2, snapshot_every=1)
+        fus, _ = capture_profile(
+            "swe2d", cfg, steps=2, snapshot_every=1, execution="fused"
+        )
+        np.testing.assert_array_equal(ref.exp_total, fus.exp_total)
+        np.testing.assert_array_equal(ref.evidence, fus.evidence)
+
+    def test_capture_does_not_perturb_the_run(self):
+        """Capture is passive: a tracked run with capture on must be
+        bit-identical (state, splits, counters) to the same run without."""
+        base = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(60)
+        cap = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(60, capture=True)
+        np.testing.assert_array_equal(np.asarray(base.state), np.asarray(cap.state))
+        np.testing.assert_array_equal(
+            np.asarray(base.tracker.state.k), np.asarray(cap.tracker.state.k)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(base.tracker.state.overflow_steps),
+            np.asarray(cap.tracker.state.overflow_steps),
+        )
+        assert base.profile is None and cap.profile is not None
+
+    def test_counts_match_direct_binning_of_the_operands(self):
+        """One step of heat1d, reference plane: the captured histograms are
+        exactly the binning of the operands the stepper multiplied."""
+        cfg = SMALL["heat1d"]
+        spec = CaptureSpec()
+        prof, _ = capture_profile("heat1d", cfg, steps=1, snapshot_every=1)
+        sim = Simulation("heat1d", cfg, PRESETS["f32"])
+        u = sim.stepper.init_state(cfg)
+        lap = u[:-2] - 2.0 * u[1:-1] + u[2:]
+        alpha = jnp.broadcast_to(jnp.float32(cfg.alpha), lap.shape)
+        expected = np.asarray(pair_exp_hist(alpha, lap, spec))
+        np.testing.assert_array_equal(prof.exp_total[0], expected)
+
+    def test_zeros_and_nonfinite_are_not_counted(self):
+        spec = CaptureSpec()
+        x = jnp.asarray([0.0, -0.0, jnp.inf, jnp.nan, 1.0, 2.0], jnp.float32)
+        from repro.profile import exp_hist
+
+        h = np.asarray(exp_hist(x, spec))
+        assert h.sum() == 2  # only 1.0 and 2.0 carry exponents
+        assert h[0 - spec.e_lo] == 1 and h[1 - spec.e_lo] == 1
+
+    def test_ensemble_capture_has_per_member_profiles(self):
+        sim = Simulation("heat1d", SMALL["heat1d"], PRESETS["f32"])
+        u0 = sim.stepper.init_state(sim.cfg)
+        u0b = jnp.stack([u0, 0.5 * u0, 2.0 * u0])
+        res = sim.run_ensemble(u0b, 24, capture=True)
+        assert res.profile.exp_total.shape[0] == 3
+        assert res.profile.evidence.shape[:2] == (3, 24)
+        # members see different amplitudes -> different histograms
+        assert not np.array_equal(
+            np.asarray(res.profile.exp_total[0]), np.asarray(res.profile.exp_total[2])
+        )
+
+    def test_capture_rejects_bad_arguments(self):
+        sim = Simulation("heat1d", SMALL["heat1d"], PRESETS["f32"])
+        with pytest.raises(TypeError):
+            sim.run(8, capture="yes")
+        with pytest.raises(ValueError):
+            CaptureSpec(e_lo=5, e_hi=5)
+
+
+# ---------------------------------------------------------------------------
+# autotune: the offline replay IS the adjust unit
+# ---------------------------------------------------------------------------
+
+
+class TestAutotune:
+    @pytest.mark.parametrize("name,steps", [("heat1d", 200), ("burgers1d", 600)])
+    def test_autotuned_k_matches_rr_tracked_converged_k(self, name, steps):
+        """Profiling under rr_tracked captures exactly the evidence the live
+        adjust unit consumed, and the synthesizer replays it through the
+        same law — so the tuned per-site k must equal the run's converged
+        final k (burgers exercises the full grow-to-FX-then-shrink drift)."""
+        prof, res = capture_profile(
+            name, SMALL[name], steps=steps, prec=TRACKED, execution="reference"
+        )
+        policy = synthesize_policy(prof, TRACKED)
+        sites = res.tracker.names
+        np.testing.assert_array_equal(
+            policy.k_array(sites), np.asarray(res.tracker.state.k)
+        )
+        if name == "burgers1d":  # the drift actually happened
+            assert int(np.asarray(res.tracker.state.shrink_steps).sum()) >= 1
+        # §5.3 counters ride into the artifact metadata
+        np.testing.assert_array_equal(
+            policy.meta["adjust_counters"]["overflow_steps"],
+            np.asarray(res.tracker.state.overflow_steps),
+        )
+
+    def test_hints_bracket_the_tuned_split(self):
+        prof, _ = capture_profile("burgers1d", SMALL["burgers1d"], steps=200)
+        policy = synthesize_policy(prof)
+        for d in policy.sites.values():
+            assert d["k_lo"] <= d["k"] <= d["k_hi"] <= policy.fmt.fx
+
+    def test_report_views(self):
+        prof, _ = capture_profile("heat1d", SMALL["heat1d"], steps=40)
+        report = prof.report()
+        for name, s in report.sites.items():
+            cov = [s["coverage_at_k"][k] for k in range(prof.prec.fmt.fx + 1)]
+            assert cov == sorted(cov) and cov[-1] == 1.0  # monotone, FX covers all
+            assert s["exp_span"] is not None and s["values_counted"] > 0
+            assert len(s["spread_over_time"]) == prof.exp_time.shape[0]
+        text = report.summary()
+        assert "heat.flux" in text and "heat.update" in text
+
+
+# ---------------------------------------------------------------------------
+# artifact: round-trip, schema gate, re-deploy bit-stability
+# ---------------------------------------------------------------------------
+
+
+class TestArtifact:
+    def _policy(self, steps=60):
+        prof, _ = capture_profile("heat1d", SMALL["heat1d"], steps=steps)
+        return synthesize_policy(prof)
+
+    def test_save_load_round_trip(self, tmp_path):
+        policy = self._policy()
+        path = policy.save(str(tmp_path / "p.json"))
+        loaded = PrecisionPolicy.load(path)
+        assert loaded.sites == policy.sites
+        assert loaded.fmt == policy.fmt
+        assert loaded.stepper == "heat1d"
+        assert loaded.to_dict()["sites"] == policy.to_dict()["sites"]
+
+    def test_schema_gate(self, tmp_path):
+        policy = self._policy()
+        d = policy.to_dict()
+        bad = dict(d, schema_version=99)
+        with pytest.raises(ValueError, match="schema_version"):
+            PrecisionPolicy.from_dict(bad)
+        with pytest.raises(ValueError, match="schema"):
+            PrecisionPolicy.from_dict(dict(d, schema="something/else"))
+
+    def test_fmt_mismatch_refused(self):
+        policy = self._policy()
+        other = PrecisionConfig(mode="deploy", fmt=dataclasses.replace(policy.fmt, mb=8))
+        with pytest.raises(ValueError, match="fmt"):
+            policy.apply(other)
+
+    def test_redeploy_round_trip_is_bit_stable_under_jit(self, tmp_path):
+        """save -> load -> deploy must reproduce the pre-save deploy run bit
+        for bit, jitted or not — the artifact is the whole state."""
+        cfg = SMALL["heat1d"]
+        policy = self._policy()
+        path = policy.save(str(tmp_path / "p.json"))
+        loaded = PrecisionPolicy.load(path)
+        prec = PrecisionConfig(mode="deploy", pinned=True)
+
+        def deploy(pol, u0=None):
+            sim = Simulation("heat1d", cfg, prec)
+            return sim.run(40, state0=u0, policy=pol)
+
+        a = deploy(policy)
+        b = deploy(loaded)
+        np.testing.assert_array_equal(np.asarray(a.state), np.asarray(b.state))
+        np.testing.assert_array_equal(
+            np.asarray(a.tracker.state.k), np.asarray(b.tracker.state.k)
+        )
+
+        sim = Simulation("heat1d", cfg, prec)
+        u0 = sim.stepper.init_state(cfg)
+        jitted = jax.jit(lambda u: deploy(loaded, u).state)
+        np.testing.assert_array_equal(np.asarray(jitted(u0)), np.asarray(jitted(u0)))
+        np.testing.assert_array_equal(np.asarray(jitted(u0)), np.asarray(a.state))
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: validate, then deploy reproduces what validation saw
+# ---------------------------------------------------------------------------
+
+
+class TestValidationLoop:
+    def test_tune_policy_end_to_end_and_deploy_reproduces(self, tmp_path):
+        cfg = SMALL["heat1d"]
+        _, report, policy = tune_policy("heat1d", cfg, steps=80)
+        assert policy.accepted
+        stamp = policy.validation
+        assert stamp["rel_l2_tracked"] <= stamp["tol"]
+
+        # a fresh pinned deploy run under the saved+reloaded artifact must
+        # land on exactly the rel-L2 the validation replay recorded
+        loaded = PrecisionPolicy.load(policy.save(str(tmp_path / "p.json")))
+        prec = PrecisionConfig(
+            mode="deploy", fmt=loaded.fmt, ema=loaded.ema, headroom=loaded.headroom,
+            pinned=True,
+        )
+        sim = Simulation("heat1d", cfg, prec)
+        res = sim.run(80, policy=loaded)
+        ref = Simulation("heat1d", cfg, PRESETS["f32"]).run(80)
+        num = np.linalg.norm(np.asarray(res.state, np.float64) - np.asarray(ref.state, np.float64))
+        rel = num / np.linalg.norm(np.asarray(ref.state, np.float64))
+        assert rel == pytest.approx(stamp["rel_l2_deploy"], rel=0, abs=1e-15)
+
+    def test_validation_rejects_a_bad_policy(self):
+        """A deliberately starved policy (k pinned to 0 on an overflowing
+        workload) must fail the closed loop, not get stamped."""
+        prof, _ = capture_profile("advection1d", SMALL["advection1d"], steps=40)
+        policy = synthesize_policy(prof)
+        for d in policy.sites.values():
+            d["k"] = 0
+            d["k_lo"] = 0
+            d["k_hi"] = 0  # ceiling forbids the tracker from growing
+        stamp = validate_policy(policy, SMALL["advection1d"], steps=40)
+        assert not stamp["accepted"]
+        assert not policy.accepted
+
+
+# ---------------------------------------------------------------------------
+# policy consumption: pinned statics, tracked clamps, serving path
+# ---------------------------------------------------------------------------
+
+
+class TestPolicyConsumption:
+    def _policy_with(self, k, lo, hi):
+        sites = {
+            "heat.flux": {"k": k, "k_lo": lo, "k_hi": hi},
+            "heat.update": {"k": k, "k_lo": lo, "k_hi": hi},
+        }
+        return PrecisionPolicy(stepper="heat1d", fmt=PRESETS["deploy"].fmt, sites=sites)
+
+    def test_pinned_deploy_keeps_the_policy_splits_static(self):
+        policy = self._policy_with(k=1, lo=0, hi=3)
+        prec = PrecisionConfig(mode="deploy", pinned=True)
+        res = Simulation("heat1d", SMALL["heat1d"], prec).run(40, policy=policy)
+        np.testing.assert_array_equal(np.asarray(res.tracker.state.k), [1, 1])
+        assert int(np.asarray(res.tracker.state.overflow_steps).sum()) == 0
+        assert int(np.asarray(res.tracker.state.shrink_steps).sum()) == 0
+
+    def test_bounds_clamp_rr_tracked_repicks(self):
+        """heat1d demands k=3; a ceiling of 2 must hold the tracker at 2
+        (the arithmetic still grow-retries per multiply — only the carried
+        bookkeeping is clamped)."""
+        policy = self._policy_with(k=2, lo=2, hi=2)
+        res = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(40, policy=policy)
+        np.testing.assert_array_equal(np.asarray(res.tracker.state.k), [2, 2])
+        free = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(40)
+        assert int(np.asarray(free.tracker.state.k).max()) == 3
+
+    def test_policy_seeds_the_fused_plane_floor(self):
+        """policy= works on the fused plane too: same final splits as the
+        reference plane under the same policy."""
+        policy = self._policy_with(k=3, lo=0, hi=3)
+        ref = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(40, policy=policy)
+        fus = Simulation("heat1d", SMALL["heat1d"], TRACKED).run(
+            40, policy=policy, execution="fused"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+
+    def test_pinned_is_static_on_the_fused_plane_too(self):
+        """cfg.pinned must mean the SAME thing on both planes: the carried
+        split is THE split, no per-block live widen. At a fixed k the
+        per-tensor and per-block quantizations coincide, so pinned fused
+        runs are bit-exact vs pinned reference runs."""
+        policy = self._policy_with(k=2, lo=0, hi=3)
+        prec = dataclasses.replace(TRACKED, pinned=True)
+        ref = Simulation("heat1d", SMALL["heat1d"], prec).run(40, policy=policy)
+        fus = Simulation("heat1d", SMALL["heat1d"], prec).run(
+            40, policy=policy, execution="fused"
+        )
+        np.testing.assert_array_equal(np.asarray(ref.state), np.asarray(fus.state))
+        np.testing.assert_array_equal(
+            np.asarray(ref.tracker.state.k), np.asarray(fus.tracker.state.k)
+        )
+
+    def test_starved_pinned_split_fails_identically_on_both_planes(self):
+        """The static gate's premise: with the retry net gone, an
+        under-provisioned split must actually fault. advection1d at k=0
+        (E3M12: max ~15.5 vs a 1e5 field) must blow up on BOTH planes, not
+        get rescued by the fused per-block selection."""
+        sites = {
+            "adv.flux": {"k": 0, "k_lo": 0, "k_hi": 0},
+            "adv.update": {"k": 0, "k_lo": 0, "k_hi": 0},
+        }
+        policy = PrecisionPolicy(
+            stepper="advection1d", fmt=PRESETS["deploy"].fmt, sites=sites
+        )
+        prec = dataclasses.replace(TRACKED, pinned=True)
+        for execution in ("reference", "fused"):
+            res = Simulation("advection1d", SMALL["advection1d"], prec).run(
+                8, policy=policy, execution=execution
+            )
+            assert not np.isfinite(np.asarray(res.state)).all(), execution
+
+    def test_serve_resolve_policy(self, tmp_path):
+        from repro.serve.decode import resolve_policy
+
+        _, _, policy = tune_policy("heat1d", SMALL["heat1d"], steps=60)
+        path = policy.save(str(tmp_path / "p.json"))
+        prec, loaded = resolve_policy(PRESETS["deploy"], path)
+        assert prec.fmt == loaded.fmt
+        # the PDE artifact's site names can't match LM tracker rows, so the
+        # hints stay on the artifact rather than being installed positionally
+        assert prec.k_bounds is None
+
+        loaded.validation = None
+        with pytest.raises(ValueError, match="accepted"):
+            resolve_policy(PRESETS["deploy"], loaded)
+        # explicit opt-out for dry runs
+        prec2, _ = resolve_policy(PRESETS["deploy"], loaded, require_accepted=False)
+        assert prec2.fmt == loaded.fmt
+
+
+# ---------------------------------------------------------------------------
+# the one-command pipeline (the acceptance criterion, in-process)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestCli:
+    def test_main_end_to_end(self, tmp_path, capsys):
+        from repro.profile.__main__ import main
+
+        rc = main(["heat1d", "--smoke", "--out", str(tmp_path)])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "parity: EXACT" in out
+        assert "ACCEPTED" in out and "REPRODUCED" in out
+        saved = json.loads((tmp_path / "heat1d_policy.json").read_text())
+        assert saved["schema"] == "repro.profile/policy"
+        assert saved["validation"]["accepted"]
