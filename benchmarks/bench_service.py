@@ -1,0 +1,114 @@
+"""Serving-plane benchmark: the batched simulation service under load.
+
+For each (stepper, precision, execution) cell, submit a burst of
+``MEMBERS`` scaled-IC requests into one :class:`repro.service.SimService`,
+drive it to idle, and report per-bucket serving statistics from the
+service's own metrics surface:
+
+    service/<stepper>/<prec>/<exec>,p50_chunk_us,thr=<member-steps/s>;p99=<us>;occ=<mean>;chunks=<n>
+
+plus one aggregate row with overall throughput and bucket occupancy:
+
+    service/_total/all/all,p50_chunk_us,thr=..;p99=..;occ=../max=..;snapshots=..
+
+The warm half of the burst dominates (compiled-chunk cache hits); the cold
+tracing cost is real serving behaviour and stays in the numbers — this
+suite tracks the *service* trajectory, not kernel microlatency (that is
+``bench_pde``'s job). ``--smoke``/``main(smoke=True)`` shrinks grids and
+horizons for the CI fast tier; rows are captured by ``benchmarks.run`` into
+``BENCH_service.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.service import ServiceConfig, SimRequest, SimService, scaled_state0
+
+#: benchmarked cells: (stepper, precision, execution)
+CELLS = (
+    ("heat1d", "f32", "reference"),
+    ("heat1d", "r2f2_16", "reference"),
+    ("heat1d", "rr_tracked", "reference"),
+    ("heat2d", "r2f2_16", "reference"),
+    ("heat2d", "deploy", "fused"),
+    ("advection1d", "rr_tracked", "reference"),
+    ("burgers1d", "rr_tracked", "reference"),
+    ("burgers1d", "deploy", "fused"),
+    ("swe2d", "rr_tracked", "reference"),
+)
+SMOKE_CELLS = (
+    ("heat1d", "r2f2_16", "reference"),
+    ("heat1d", "rr_tracked", "reference"),
+    ("heat2d", "deploy", "fused"),
+)
+
+MEMBERS = 4  # requests per cell — the bucket packing width under test
+
+
+def _overrides(stepper: str, smoke: bool):
+    if not smoke:
+        return None
+    return {
+        "heat1d": {"nx": 64},
+        "heat2d": {"nx": 16, "ny": 16},
+        "advection1d": {"nx": 64},
+        "burgers1d": {"nx": 64},
+        "swe2d": {"nx": 16, "ny": 16},
+    }.get(stepper)
+
+
+def main(smoke: bool = False) -> None:
+    cells = SMOKE_CELLS if smoke else CELLS
+    steps = 48 if smoke else 240
+    every = 12 if smoke else 30
+
+    svc = SimService(ServiceConfig(max_queue=1024, max_bucket=MEMBERS))
+    handles = []
+    cell_keys = {}  # (stepper, prec, execution) -> full BucketKey (metrics key)
+    for stepper, prec, execution in cells:
+        ov = _overrides(stepper, smoke)
+        for i in range(MEMBERS):
+            h = svc.submit(
+                SimRequest(
+                    stepper,
+                    steps=steps,
+                    precision=prec,
+                    overrides=ov,
+                    snapshot_every=every,
+                    execution=execution,
+                    state0=scaled_state0(stepper, 0.6 + 0.15 * i, overrides=ov),
+                    tag=f"{stepper}/{prec}/{execution}",
+                )
+            )
+            handles.append(h)
+            cell_keys[(stepper, prec, execution)] = h.bucket_key
+    svc.run_until_idle()
+
+    m = svc.metrics
+    incomplete = [h.tag for h in handles if h.status != "done"]
+    if incomplete:
+        raise RuntimeError(f"service bench left requests unfinished: {incomplete}")
+
+    for stepper, prec, execution in cells:
+        key = cell_keys[(stepper, prec, execution)]  # full key: formats never merge
+        occ_mean, _ = m.occupancy(key)
+        n_chunks = sum(1 for k, _, _, _ in m.chunk_samples if k == key)
+        print(  # row name keeps the preset label (distinguishes formats)
+            f"service/{stepper}/{prec}/{execution},{m.latency_us(50, key):.1f},"
+            f"thr={m.throughput(key):.0f};p99={m.latency_us(99, key):.1f}us;"
+            f"occ={occ_mean:.2f};chunks={n_chunks}"
+        )
+    occ_mean, occ_max = m.occupancy()
+    print(
+        f"service/_total/all/all,{m.latency_us(50):.1f},"
+        f"thr={m.throughput():.0f};p99={m.latency_us(99):.1f}us;"
+        f"occ={occ_mean:.2f}/max{occ_max};snapshots={m.snapshots_emitted};"
+        f"completed={m.completed}"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    main(smoke=ap.parse_args().smoke)

@@ -1,6 +1,6 @@
 """Benchmark harness: one function per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,pde,kernels,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only mul,heat,swe,pde,service,kernels,roofline]
                                             [--json-dir artifacts/bench] [--smoke]
 
 Most benches print ``name,us_per_call,derived`` CSV lines; the harness
@@ -27,7 +27,7 @@ import os
 import subprocess
 import time
 
-SUITES = ("mul", "exploration", "heat", "swe", "pde", "kernels", "roofline")
+SUITES = ("mul", "exploration", "heat", "swe", "pde", "service", "kernels", "roofline")
 
 
 def _git_sha():
@@ -55,6 +55,8 @@ def _run_suite(name: str, smoke: bool = False) -> str:
         from benchmarks import bench_swe as mod
     elif name == "pde":
         from benchmarks import bench_pde as mod
+    elif name == "service":
+        from benchmarks import bench_service as mod
     elif name == "kernels":
         from benchmarks import bench_kernels as mod
     elif name == "roofline":

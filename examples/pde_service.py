@@ -1,0 +1,113 @@
+"""Serving quickstart: a mixed burst through the simulation service.
+
+    PYTHONPATH=src python examples/pde_service.py [--steps 240] [--smoke]
+
+The production loop end to end (DESIGN.md §11 + §12):
+
+1. **autotune** — for each workload (heat2d, advection1d, burgers1d), run
+   the ``repro.profile`` pipeline once: capture the f32 range profile,
+   synthesize a per-site ``PrecisionPolicy``, closed-loop validate it;
+2. **serve** — submit a mixed burst to one ``repro.service.SimService``:
+   per workload an f32 oracle request, two ``rr_tracked`` requests at
+   different IC scales carrying the validated artifact (tracker seeded at
+   the tuned splits, re-picks clamped to its ``[k_lo, k_hi]`` hints), and a
+   **pinned deploy** request — the static profiled-silicon emulation. The
+   scheduler buckets compatible requests onto shared vmapped ensemble
+   calls; different modes/steppers serve concurrently from sibling buckets.
+3. **report** — per-request: snapshots streamed, final splits, rel-L2 of
+   the final state against the f32 request served in the same burst; then
+   the service metrics surface (throughput, p50/p99 chunk latency, bucket
+   occupancy, fleet-level §5.3 adjust counters).
+"""
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.core.policy import PrecisionConfig  # noqa: E402
+from repro.pde import get_stepper  # noqa: E402
+from repro.precision import PRESETS  # noqa: E402
+from repro.profile import tune_policy  # noqa: E402
+from repro.service import (  # noqa: E402
+    ServiceConfig,
+    SimRequest,
+    SimService,
+    scaled_state0,
+)
+
+WORKLOADS = ("heat2d", "advection1d", "burgers1d")
+TRACKED = dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--smoke", action="store_true", help="reduced steps")
+    args = ap.parse_args()
+    steps = 64 if args.smoke else args.steps
+
+    # -- 1. autotune one policy artifact per workload -----------------------
+    policies = {}
+    for name in WORKLOADS:
+        _, _, policy = tune_policy(name, steps=steps)
+        stamp = policy.validation or {}
+        policies[name] = policy
+        print(f"[tune] {name}: "
+              + ", ".join(f"{s}: k={d['k']} [{d['k_lo']},{d['k_hi']}]"
+                          for s, d in policy.sites.items())
+              + f" — {'ACCEPTED' if policy.accepted else 'REJECTED'}"
+              f" (rr_tracked rel-L2 {stamp.get('rel_l2_tracked', float('nan')):.2e})")
+
+    # -- 2. the mixed burst --------------------------------------------------
+    svc = SimService(ServiceConfig(max_queue=256))
+    deploy_pinned = PrecisionConfig(mode="deploy", pinned=True)
+    handles = []
+    for name in WORKLOADS:
+        pol = policies[name]
+        handles += [
+            svc.submit(SimRequest(name, steps=steps, precision="f32",
+                                  tag=f"{name}/f32")),
+            svc.submit(SimRequest(name, steps=steps, precision=TRACKED,
+                                  policy=pol, tag=f"{name}/rr_tracked@policy")),
+            svc.submit(SimRequest(name, steps=steps, precision=TRACKED,
+                                  policy=pol, state0=scaled_state0(name, 0.8),
+                                  tag=f"{name}/rr_tracked@policy(0.8x)")),
+            svc.submit(SimRequest(name, steps=steps, precision=deploy_pinned,
+                                  policy=pol, tag=f"{name}/deploy-pinned@policy")),
+        ]
+    print(f"\n[serve] submitted {len(handles)} requests across "
+          f"{len(WORKLOADS)} workloads; pumping to idle...")
+    svc.run_until_idle()
+
+    # -- 3. per-request results + metrics -----------------------------------
+    oracle = {h.tag.split("/")[0]: h for h in handles if h.tag.endswith("/f32")}
+    print()
+    for h in handles:
+        if h.status != "done":
+            print(f"  {h.tag:32s} {h.status.upper()}")
+            continue
+        res = h.result()
+        name = h.tag.split("/")[0]
+        offset = get_stepper(name).metric_offset(get_stepper(name).default_config())
+        line = f"  {h.tag:32s} {len(res.snapshots)} snapshots"
+        ref = oracle[name]
+        if h is not ref and "(0.8x)" not in h.tag:
+            a = np.asarray(res.state, np.float64) - offset
+            b = np.asarray(ref.result().state, np.float64) - offset
+            rel = float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
+            line += f", rel-L2 vs f32 {rel:.3e}"
+        if res.final_k is not None:
+            line += f", final splits {res.final_k}"
+        print(line)
+
+    print()
+    print(svc.metrics.report())
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["DEFAULT_RULES", "axis_rules", "constrain", "logical_spec"]
+__all__ = ["DEFAULT_RULES", "active_mesh", "axis_rules", "constrain", "logical_spec"]
 
 # One entry per logical activation axis: mesh axis name, tuple of names, or
 # None (unconstrained). Axes missing from the live mesh are filtered at
@@ -96,6 +96,17 @@ def axis_rules(mesh: Mesh, rules: Optional[Dict[str, Rule]] = None):
         yield mesh
     finally:
         stack.pop()
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The innermost :func:`axis_rules` context's mesh, or None.
+
+    Lets mesh-agnostic layers (e.g. the ``repro.service`` batcher putting
+    bucket members on the logical ``batch`` axis) decide whether to request
+    sharded ensembles without threading a mesh handle through their API.
+    """
+    stack = getattr(_ACTIVE, "stack", None)
+    return stack[-1][0] if stack else None
 
 
 def _axis_extent(rule: Rule, mesh: Mesh) -> int:

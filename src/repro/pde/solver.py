@@ -450,6 +450,7 @@ class Simulation:
         execution: str = "reference",
         capture=None,
         policy=None,
+        tracker0_batch=None,
     ) -> SimResult:
         """Vmapped ensemble over a batch of initial conditions.
 
@@ -462,24 +463,39 @@ class Simulation:
         production-scale path for parameter sweeps and uncertainty
         quantification. ``capture``/``policy`` behave as in :meth:`run`,
         per member (each member gets its own histograms and evidence).
+
+        ``tracker0_batch`` resumes tracked modes from a *stacked* tracker
+        (a SiteTracker whose state arrays lead with the member dim — e.g.
+        the ``tracker`` a previous ``run_ensemble`` returned). This is the
+        repacking contract ``repro.service`` builds its continuous batching
+        on: between chunks the serving plane drains finished members, adds
+        joiners, restacks ``(state, tracker)`` and calls back in — each
+        member's carried split ``k`` and §5.3 adjustment counters survive
+        the repack because they are handed straight back here.
         """
         if sharded:
             state0_batch = _constrain_ensemble(state0_batch)
+            if tracker0_batch is not None:
+                tracker0_batch = _constrain_ensemble(tracker0_batch)
         # resolve once outside the vmap so an ineligible explicit "fused"
         # raises eagerly with the real reason rather than from inside a trace
         execution = self._resolve_execution(execution)
 
-        def one(s0):
+        def one(s0, tr0=None):
             return self.run(
                 steps,
                 snapshot_every=snapshot_every,
                 state0=s0,
+                tracker=tr0,
                 execution=execution,
                 capture=capture,
                 policy=policy,
             )
 
-        res = jax.vmap(one)(state0_batch)
+        if tracker0_batch is not None:
+            res = jax.vmap(one)(state0_batch, tracker0_batch)
+        else:
+            res = jax.vmap(one)(state0_batch)
         if sharded:
             # every result leaf (state, snapshots, tracker rows) leads with
             # the member dim — annotate them all so nothing gets replicated

@@ -25,7 +25,7 @@ this package is the profile→tune→deploy pipeline that produces it:
 from __future__ import annotations
 
 from .capture import CaptureResult, CaptureSpec, exp_hist, pair_exp_hist, site_evidence
-from .artifact import SCHEMA, SCHEMA_VERSION, PrecisionPolicy
+from .artifact import SCHEMA, SCHEMA_VERSION, PrecisionPolicy, resolve_policy
 from .analysis import RangeProfile, RangeReport
 from .autotune import synthesize_policy, tune_policy, validate_policy
 from .pipeline import capture_profile
@@ -39,6 +39,7 @@ __all__ = [
     "SCHEMA",
     "SCHEMA_VERSION",
     "PrecisionPolicy",
+    "resolve_policy",
     "RangeProfile",
     "RangeReport",
     "synthesize_policy",

@@ -31,7 +31,7 @@ import numpy as np
 from repro.core.flexformat import FlexFormat
 from repro.core.policy import PrecisionConfig
 
-__all__ = ["SCHEMA", "SCHEMA_VERSION", "PrecisionPolicy"]
+__all__ = ["SCHEMA", "SCHEMA_VERSION", "PrecisionPolicy", "resolve_policy"]
 
 SCHEMA = "repro.profile/policy"
 SCHEMA_VERSION = 1
@@ -152,3 +152,37 @@ class PrecisionPolicy:
     def load(cls, path: str) -> "PrecisionPolicy":
         with open(path) as f:
             return cls.from_dict(json.load(f))
+
+
+def resolve_policy(
+    prec: PrecisionConfig, policy, require_accepted: bool = True
+) -> Tuple[PrecisionConfig, PrecisionPolicy]:
+    """Derive a consumer's precision from a PrecisionPolicy artifact.
+
+    The one shared implementation of the artifact-consumption gate — the LM
+    serving path (``repro.serve.decode.resolve_policy`` is a thin shim over
+    this) and the simulation-serving plane (``repro.service``) both resolve
+    per-request artifacts here, so the rules can never drift:
+
+    * ``policy`` may be a :class:`PrecisionPolicy` or a path to its JSON
+      (``load`` applies the schema/version checks);
+    * artifacts whose closed-loop validation never stamped them ``accepted``
+      are refused (``require_accepted=False`` opts out, e.g. for dry-runs);
+    * the returned config is re-based on the artifact's ``<EB,MB,FX>``
+      format — a policy tuned for one format says nothing about another.
+
+    Returns ``(prec, policy)``. The per-site ``[k_lo, k_hi]`` hints stay on
+    the returned artifact: they are keyed by the *producer's* site names and
+    only apply where the consumer threads a tracker with matching sites
+    (``PrecisionPolicy.apply`` installs them positionally; a consumer with
+    foreign site names must not).
+    """
+    if isinstance(policy, str):
+        policy = PrecisionPolicy.load(policy)
+    if require_accepted and not policy.accepted:
+        raise ValueError(
+            f"policy artifact for {policy.stepper!r} was never accepted by a "
+            "validation replay; re-run `python -m repro.profile` or pass "
+            "require_accepted=False"
+        )
+    return dataclasses.replace(prec, fmt=policy.fmt), policy

@@ -1,3 +1,3 @@
 """Serving: batched prefill + greedy decode."""
 
-from .decode import generate
+from .decode import generate, resolve_policy

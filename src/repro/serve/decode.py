@@ -35,26 +35,16 @@ __all__ = ["generate", "resolve_policy"]
 def resolve_policy(prec: PrecisionConfig, policy, require_accepted: bool = True):
     """Derive the serving precision from a PrecisionPolicy artifact.
 
-    ``policy``: a ``repro.profile.PrecisionPolicy`` or a path to its JSON.
-    Returns ``(prec, policy)`` — the config re-based on the artifact's
-    format. Refuses artifacts whose closed-loop validation never accepted
-    them (``require_accepted=False`` opts out, e.g. for dry-runs). The
-    per-site hints stay on the returned artifact for consumers that thread
-    a tracker whose site names match (see module docstring).
+    Thin shim: the accepted-gate and format-rebase rules live in
+    :func:`repro.profile.artifact.resolve_policy`, shared with the
+    simulation-serving plane (``repro.service``) so the two consumers can
+    never drift. Returns ``(prec, policy)``; the per-site hints stay on the
+    returned artifact for consumers that thread a tracker whose site names
+    match (see module docstring).
     """
-    from repro.profile import PrecisionPolicy  # lazy: serving paths stay light
+    from repro.profile.artifact import resolve_policy as _resolve  # lazy: light
 
-    if isinstance(policy, str):
-        policy = PrecisionPolicy.load(policy)
-    if require_accepted and not policy.accepted:
-        raise ValueError(
-            f"policy artifact for {policy.stepper!r} was never accepted by a "
-            "validation replay; re-run `python -m repro.profile` or pass "
-            "require_accepted=False"
-        )
-    import dataclasses
-
-    return dataclasses.replace(prec, fmt=policy.fmt), policy
+    return _resolve(prec, policy, require_accepted=require_accepted)
 
 
 def generate(

@@ -1,0 +1,56 @@
+"""repro.service — the batched simulation-serving plane (DESIGN.md §12).
+
+The ROADMAP's production story, made concrete: concurrent, heterogeneous
+simulation requests — each with its own stepper, horizon, snapshot cadence
+and per-request precision policy artifact — continuously batched onto the
+vmapped fused ensembles so the Pallas execution plane stays saturated while
+every request's numerics remain bit-identical to a solo run.
+
+    from repro.service import SimRequest, SimService
+
+    svc = SimService()
+    h = svc.submit(SimRequest("heat2d", steps=1500, precision="rr_tracked"))
+    svc.run_until_idle()
+    res = h.result()            # snapshots streamed; final splits in res.final_k
+    print(svc.metrics.report()) # throughput, p50/p99 chunk latency, occupancy
+
+Layers: :mod:`~repro.service.request` (job model + admission-time
+resolution), :mod:`~repro.service.scheduler` (bounded-queue admission,
+bucketing, eviction/resume policy, the :class:`SimService` facade),
+:mod:`~repro.service.batcher` (continuous batching at chunk boundaries onto
+``Simulation.run_ensemble``), :mod:`~repro.service.stream` (per-request
+event streams), :mod:`~repro.service.metrics` (the observability surface).
+"""
+
+from __future__ import annotations
+
+from .batcher import Bucket, ChunkCompiler
+from .metrics import ServiceMetrics
+from .request import (
+    BucketKey,
+    RequestRecord,
+    RequestResult,
+    SimRequest,
+    resolve_request,
+    scaled_state0,
+)
+from .scheduler import ServiceConfig, ServiceOverloaded, SimService
+from .stream import RequestHandle, ResultStream, StreamEvent
+
+__all__ = [
+    "SimRequest",
+    "SimService",
+    "ServiceConfig",
+    "ServiceOverloaded",
+    "RequestHandle",
+    "RequestRecord",
+    "RequestResult",
+    "ResultStream",
+    "StreamEvent",
+    "ServiceMetrics",
+    "Bucket",
+    "BucketKey",
+    "ChunkCompiler",
+    "resolve_request",
+    "scaled_state0",
+]

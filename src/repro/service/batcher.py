@@ -1,0 +1,214 @@
+"""Continuous batching onto the fused ensembles, at chunk boundaries.
+
+A :class:`Bucket` is one group of compatible requests (same
+:class:`~repro.service.request.BucketKey`) advancing together through ONE
+vmapped ``Simulation.run_ensemble`` call per chunk. The fused execution
+plane (DESIGN.md §10) already runs whole snapshot intervals as single
+Pallas kernel chunks; the bucket exploits exactly that seam:
+
+* **chunk size is event-driven** — ``min`` over members of steps-to-next-
+  event (own snapshot point or horizon), so no member is ever stepped past
+  a point where a solo run would have paused. Members with heterogeneous
+  cadences/horizons coexist; the bucket just pauses more often.
+* **join/drain between chunks** — the member list is plain host state
+  between chunks: finished requests drain out, queued compatible requests
+  pack in, and the next chunk call restacks ``(state, tracker)``. Because
+  each member's carried :class:`SiteTracker` rows (split ``k``, EMAs, §5.3
+  adjustment counters) ride the stack and come back sliced, repacking is
+  *semantically invisible* — a member's trajectory is bit-identical to its
+  solo ``Simulation.run`` (asserted per stepper/mode in
+  ``tests/test_service.py``).
+* **compiled-chunk cache** — chunk programs are jitted once per
+  ``(bucket key, chunk steps, member count)`` and reused across repacks, so
+  steady-state traffic pays tracing cost only when the packing shape
+  actually changes.
+
+Why invisibility holds: a ``lax.scan`` over ``c1 + c2`` steps computes the
+same op sequence as two scans of ``c1`` then ``c2`` (no cross-iteration
+reassociation), vmapped elementwise/stencil arithmetic is per-lane
+identical to the solo program, and snapshots are only recorded when a
+member's own ``elapsed`` hits its own cadence — the same states a solo run
+observes. The one deliberate relaxation: on the fused plane, ``rr_tracked``
+folds kernel evidence at *bucket* chunk boundaries, which may be finer than
+a solo run's snapshot intervals when cadences mix — the adjust unit then
+sees the same evidence replayed in the same order, just folded earlier, so
+final splits and §5.3 counters still match (the same guarantee the fused
+plane itself makes vs the stepwise loop).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import active_mesh
+
+from .metrics import ServiceMetrics
+from .request import BucketKey, RequestRecord, RequestResult
+
+__all__ = ["Bucket", "ChunkCompiler", "tree_stack", "tree_slice"]
+
+
+def tree_stack(trees):
+    """Stack a list of congruent pytrees along a new leading member dim."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_slice(tree, i: int):
+    """Member ``i``'s slice of a stacked pytree (drops the member dim)."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+class ChunkCompiler:
+    """Jitted chunk programs, cached per (key, chunk, n_members, mesh).
+
+    The program is ``run_ensemble(state_b, chunk, snapshot_every=chunk,
+    tracker0_batch=tracker_b)`` — one snapshot interval, vmapped over the
+    bucket, trackers threaded through and returned stacked for repacking.
+    ``mesh`` must be the active ``axis_rules`` mesh (or None): sharded
+    programs bake ``NamedSharding(mesh, ...)`` constraints in at trace
+    time, so a program traced under one mesh must never serve another.
+
+    The cache is LRU-bounded (``maxsize``): event-driven chunking produces
+    one distinct chunk length per distinct member-event spacing, so a
+    long-lived service with heterogeneous traffic would otherwise retain
+    compiled executables without limit. Evicted entries simply retrace on
+    next use.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
+
+    def get(self, sim, key: BucketKey, chunk: int, n: int, sharded: bool, mesh=None):
+        cache_key = (key, chunk, n, sharded, mesh)
+        fn = self._cache.get(cache_key)
+        if fn is None:
+
+            def chunk_fn(state_b, tracker_b):
+                res = sim.run_ensemble(
+                    state_b,
+                    chunk,
+                    snapshot_every=chunk,
+                    tracker0_batch=tracker_b,
+                    execution=key.execution,
+                    sharded=sharded,
+                )
+                return res.state, res.snapshots, res.tracker
+
+            fn = self._cache[cache_key] = jax.jit(chunk_fn)
+            if len(self._cache) > self.maxsize:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(cache_key)
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+class Bucket:
+    """One packing of compatible requests; advances one chunk at a time."""
+
+    def __init__(self, key: BucketKey):
+        self.key = key
+        self.members: List[RequestRecord] = []
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def add(self, rec: RequestRecord) -> None:
+        if rec.key != self.key:
+            raise ValueError(
+                f"request {rec.id} (key {rec.key.short()}) is not compatible "
+                f"with bucket {self.key.short()}"
+            )
+        self.members.append(rec)
+        rec.status = "running"
+
+    def next_chunk(self) -> int:
+        """Steps until the earliest member event — the next chunk's length."""
+        return min(m.steps_to_next_event() for m in self.members)
+
+    def advance(
+        self,
+        compiler: ChunkCompiler,
+        metrics: ServiceMetrics,
+        sharded: Optional[bool] = None,
+    ) -> List[RequestRecord]:
+        """Run one chunk for every member; returns the members that drained.
+
+        ``sharded=None`` auto-detects: bucket members ride the logical
+        ``batch`` axis whenever a ``dist.sharding.axis_rules`` mesh context
+        is active (``repro.dist.sharding.active_mesh``), so the same service
+        loop spreads buckets over a mesh's data axes unchanged.
+        """
+        if not self.members:
+            return []
+        mesh = active_mesh()
+        if sharded is None:
+            sharded = mesh is not None
+        chunk = self.next_chunk()
+        n = len(self.members)
+        sim = self.members[0].sim  # identical (stepper, cfg, prec) by key
+
+        state_b = tree_stack([m.state for m in self.members])
+        tracked = self.members[0].tracked
+        tracker_b = (
+            tree_stack([m.tracker for m in self.members]) if tracked else None
+        )
+
+        fn = compiler.get(
+            sim, self.key, chunk, n, sharded, mesh=mesh if sharded else None
+        )
+        t0 = time.perf_counter()
+        out_state, out_snaps, out_tracker = jax.block_until_ready(
+            fn(state_b, tracker_b)
+        )
+        dt = time.perf_counter() - t0
+        metrics.observe_chunk(self.key, n, chunk, dt)
+
+        drained: List[RequestRecord] = []
+        for i, m in enumerate(self.members):
+            m.state = tree_slice(out_state, i)
+            if tracked:
+                m.tracker = tree_slice(out_tracker, i)
+            m.elapsed += chunk
+            m.chunks += 1
+            if m.snapshot_due():
+                # snaps lead with (member, n_out=1, ...): this member's frame
+                snap = jax.tree_util.tree_map(
+                    lambda x: np.asarray(x[i, 0]), out_snaps
+                )
+                m.snapshots.append((m.elapsed, snap))
+                m.stream.emit("snapshot", m.elapsed, snap)
+                metrics.snapshots_emitted += 1
+            if m.remaining == 0:
+                drained.append(m)
+
+        for m in drained:
+            self.members.remove(m)
+            self._finalize(m, metrics)
+        return drained
+
+    @staticmethod
+    def _finalize(m: RequestRecord, metrics: ServiceMetrics) -> None:
+        final_k, adjustments = m.site_summary()
+        m.status = "done"
+        m.result = RequestResult(
+            state=jax.tree_util.tree_map(np.asarray, m.state),
+            snapshots=[a for _, a in m.snapshots],
+            snapshot_steps=[s for s, _ in m.snapshots],
+            tracker=m.tracker,
+            final_k=final_k,
+            adjustments=adjustments,
+            elapsed=m.elapsed,
+            chunks=m.chunks,
+        )
+        m.stream.emit("done", m.elapsed, m.result)
+        metrics.observe_completion(adjustments)

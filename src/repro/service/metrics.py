@@ -1,0 +1,140 @@
+"""The service's observability surface: counters, latency, occupancy.
+
+One :class:`ServiceMetrics` per :class:`~repro.service.scheduler.SimService`
+accumulates everything the ISSUE's production story needs to be judged by:
+
+* **throughput** — member-steps advanced per second of busy (chunk) time:
+  the saturation measure of the fused plane under heterogeneous traffic;
+* **chunk latency** — wall seconds per bucket chunk call (p50/p99 over the
+  service lifetime, and per bucket key for the benchmark suite);
+* **bucket occupancy** — members per chunk call: how well the bucketing
+  scheduler packs the vmapped ensembles (1.0 = no batching win at all);
+* **per-site adjust counters** — the §5.3 grow/shrink totals drained from
+  completed tracked requests, aggregated by site name: the fleet-level view
+  of how hard the precision-adjust unit worked;
+* lifecycle counters — submitted / rejected (backpressure) / completed /
+  evicted / resumed / snapshots streamed.
+
+Everything is plain Python floats/ints on the host — metrics never touch
+the jitted chunk programs.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ServiceMetrics"]
+
+
+class ServiceMetrics:
+    def __init__(self, window: int = 65536):
+        self.submitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.failed = 0
+        self.evicted = 0
+        self.resumed = 0
+        self.snapshots_emitted = 0
+        self.chunks = 0
+        self.member_steps = 0  # sum over chunks of n_members * chunk_steps
+        self.busy_seconds = 0.0
+        #: recent per-chunk samples (full BucketKey, n_members, steps, secs)
+        #: — a bounded window, so a long-lived service never grows unbounded
+        #: host state; percentiles/occupancy/per-key stats are over this
+        #: window while the counters above stay cumulative. Samples key on
+        #: the FULL bucket key, so buckets that differ only in format/config/
+        #: shape never merge in per-key statistics (``BucketKey.short()`` is
+        #: display only).
+        self.chunk_samples: Deque[Tuple[Any, int, int, float]] = deque(maxlen=window)
+        #: site name -> [grew, shrank] totals from completed tracked requests
+        self.site_adjustments: Dict[str, List[int]] = defaultdict(lambda: [0, 0])
+
+    # -- recording -----------------------------------------------------------
+
+    def observe_chunk(self, key, n_members: int, steps: int, seconds: float):
+        self.chunks += 1
+        self.member_steps += n_members * steps
+        self.busy_seconds += seconds
+        self.chunk_samples.append((key, n_members, steps, seconds))
+
+    def observe_completion(self, adjustments: Optional[Dict[str, Tuple[int, int]]]):
+        self.completed += 1
+        for site, (grew, shrank) in (adjustments or {}).items():
+            self.site_adjustments[site][0] += grew
+            self.site_adjustments[site][1] += shrank
+
+    # -- derived views -------------------------------------------------------
+
+    def _latencies(self, key=None) -> np.ndarray:
+        xs = [s for k, _, _, s in self.chunk_samples if key is None or k == key]
+        return np.asarray(xs, np.float64)
+
+    def latency_us(self, pct: float, key=None) -> float:
+        """Chunk-latency percentile in microseconds (NaN with no samples).
+        ``key``: a full BucketKey to restrict to one bucket class."""
+        xs = self._latencies(key)
+        return float(np.percentile(xs, pct) * 1e6) if xs.size else float("nan")
+
+    def throughput(self, key=None) -> float:
+        """Member-steps per second of busy time (0.0 with no samples).
+
+        Service-wide throughput uses the cumulative counters; per-key
+        throughput is over the recent sample window."""
+        if key is None:
+            return self.member_steps / self.busy_seconds if self.busy_seconds > 0 else 0.0
+        rows = [(n * st, s) for k, n, st, s in self.chunk_samples if k == key]
+        steps = sum(r[0] for r in rows)
+        secs = sum(r[1] for r in rows)
+        return steps / secs if secs > 0 else 0.0
+
+    def occupancy(self, key=None) -> Tuple[float, int]:
+        """(mean, max) members per chunk call ((0.0, 0) with no samples)."""
+        ns = [n for k, n, _, _ in self.chunk_samples if key is None or k == key]
+        return (float(np.mean(ns)), int(max(ns))) if ns else (0.0, 0)
+
+    def summary(self) -> Dict:
+        occ_mean, occ_max = self.occupancy()
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "failed": self.failed,
+            "evicted": self.evicted,
+            "resumed": self.resumed,
+            "snapshots_emitted": self.snapshots_emitted,
+            "chunks": self.chunks,
+            "member_steps": self.member_steps,
+            "busy_seconds": self.busy_seconds,
+            "throughput_steps_per_s": self.throughput(),
+            "chunk_latency_p50_us": self.latency_us(50),
+            "chunk_latency_p99_us": self.latency_us(99),
+            "occupancy_mean": occ_mean,
+            "occupancy_max": occ_max,
+            "site_adjustments": {
+                s: tuple(v) for s, v in sorted(self.site_adjustments.items())
+            },
+        }
+
+    def report(self) -> str:
+        s = self.summary()
+        lines = [
+            "service metrics:",
+            f"  requests    submitted={s['submitted']} completed={s['completed']} "
+            f"rejected={s['rejected']} failed={s['failed']} "
+            f"evicted={s['evicted']} resumed={s['resumed']}",
+            f"  chunks      n={s['chunks']} p50={s['chunk_latency_p50_us']:.0f}us "
+            f"p99={s['chunk_latency_p99_us']:.0f}us busy={s['busy_seconds']:.2f}s",
+            f"  throughput  {s['throughput_steps_per_s']:.0f} member-steps/s "
+            f"({s['member_steps']} steps, {s['snapshots_emitted']} snapshots streamed)",
+            f"  occupancy   mean={s['occupancy_mean']:.2f} max={s['occupancy_max']} "
+            f"members/chunk",
+        ]
+        if s["site_adjustments"]:
+            adj = ", ".join(
+                f"{site}:+{g}/-{h}" for site, (g, h) in s["site_adjustments"].items()
+            )
+            lines.append(f"  adjust unit {adj}")
+        return "\n".join(lines)
