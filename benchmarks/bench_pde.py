@@ -17,6 +17,14 @@ CSV rows: ``pde/<case>/<prec>/<exec>,us_per_step,rel=..;corr=..;STATUS;...``
 — captured by ``benchmarks.run`` into ``BENCH_pde.json``. ``--smoke`` (or
 ``main(smoke=True)``) caps step counts for the CI fast tier, so the bench
 trajectory accumulates on every push.
+
+Storage pairing: for the rr precisions in :data:`PACKED_PRECS`, every fused
+row gets a paired ``fused+packed`` row — the same chunked program carrying
+R2F2-packed state (``storage="packed"``) between chunk boundaries instead
+of f32 — and both report ``bytes_per_step`` (2x the carried-state footprint:
+one read + one write per step at the storage boundary,
+``repro.pack.state_nbytes``). The packed row's bytes must come in under the
+f32 row's — that IS the bandwidth claim, regression-checked per push.
 """
 
 from __future__ import annotations
@@ -27,10 +35,13 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+from repro.pack import is_packed, state_nbytes, unpack_state
 from repro.precision import PRESETS
 from repro.pde import Simulation, get_stepper, known_steppers
 
 DEFAULT_PRECS = ("e5m10", "r2f2_16", "r2f2_15", "bf16", "rr_tracked")
+#: rr precisions whose fused rows get a paired ``fused+packed`` storage row
+PACKED_PRECS = ("r2f2_16", "rr_tracked")
 SMOKE_STEPS = 60
 
 #: the bench ladder's precision configs: the PRESETS plus the tracked rr
@@ -102,7 +113,7 @@ def _iter_subjaxprs(v):
             yield inner
 
 
-def chunk_op_counts(sim: Simulation, chunk: int, execution: str):
+def chunk_op_counts(sim: Simulation, chunk: int, execution: str, storage: str = "f32"):
     """Static op counts of one snapshot-chunk program: (pallas_calls,
     lowered instruction count). The fused plane's signature is one
     pallas_call per chunk where the reference plane scans per-step engine
@@ -112,7 +123,10 @@ def chunk_op_counts(sim: Simulation, chunk: int, execution: str):
     state0 = sim.stepper.init_state(sim.cfg)
 
     def fn(s0):
-        return sim.run(chunk, snapshot_every=chunk, state0=s0, execution=execution).state
+        return sim.run(
+            chunk, snapshot_every=chunk, state0=s0, execution=execution,
+            storage=storage,
+        ).state
 
     def count_pallas(jaxpr) -> int:
         n = 0
@@ -143,22 +157,29 @@ def run_case(name: str, sc: Scenario, smoke: bool = False):
     rows = []
     for prec_name in sc.precs:
         prec = PREC_LADDER[prec_name]
-        for execution in ("reference", "fused"):
+        storages = [("reference", "f32"), ("fused", "f32")]
+        if prec_name in PACKED_PRECS:
+            storages.append(("fused", "packed"))  # the bandwidth pair row
+        for execution, storage in storages:
             sim = Simulation(name, cfg, prec)
             if execution == "fused" and not sim.fused_eligible():
                 continue  # mode/stepper outside the fused plane: no pair row
             t0 = time.perf_counter()
-            res = sim.run(steps, execution=execution)
-            out = observe(stepper, cfg, res.state, sc.offset)
+            res = sim.run(steps, execution=execution, storage=storage)
+            state = res.state
+            out_state = unpack_state(state) if is_packed(state) else state
+            out = observe(stepper, cfg, out_state, sc.offset)
             us = (time.perf_counter() - t0) * 1e6 / steps
-            n_pallas, n_hlo = chunk_op_counts(sim, chunk, execution)
+            n_pallas, n_hlo = chunk_op_counts(sim, chunk, execution, storage)
             row = dict(
                 case=sc.label or name,
                 prec=prec_name,
-                execution=execution,
+                execution=execution if storage == "f32" else f"{execution}+{storage}",
                 us_per_step=us,
                 pallas_calls=n_pallas,
                 hlo_ops=n_hlo,
+                # one read + one write of the carried state per step
+                bytes_per_step=2 * state_nbytes(state),
                 **measure(out, ref, sc.judge),
             )
             if res.tracker is not None:  # §5.3 adjustment counters
@@ -177,6 +198,7 @@ def format_row(r, suite: str = "pde") -> str:
     derived = (
         f"rel={r['rel']:.4f};corr={r['corr']:.4f};{status};"
         f"pallas={r['pallas_calls']};hlo={r['hlo_ops']}"
+        f";bytes_per_step={r['bytes_per_step']}"
     )
     if "grow_adjusts" in r:
         derived += f";adj=+{r['grow_adjusts']}/-{r['shrink_adjusts']}"

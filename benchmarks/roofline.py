@@ -1,4 +1,15 @@
-"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+"""Roofline analysis: PDE storage-traffic rows + LM dry-run table.
+
+The PDE section is analytic and always runs (no artifacts needed): per
+registered stepper x carried-storage format, the bytes one step moves
+across the HBM boundary (2x the carried-state footprint — one read, one
+write) and the memory-roofline time that traffic costs at HBM bandwidth.
+The ``packed`` rows carry R2F2 payloads (``repro.pack``) instead of f32;
+their bytes-per-step ratio against the f32 rows is the bandwidth headline
+the packed execution plane banks. Emitted as ``name,us,derived`` CSV so
+``benchmarks.run`` captures them into ``BENCH_roofline.json``.
+
+The LM table below it analyzes compiled dry-run artifacts (deliverable g).
 
 Per (arch x shape x mesh) cell, from artifacts/dryrun/<cell>.json:
 
@@ -108,7 +119,46 @@ def load_all(mesh: str = "16x16") -> List[Dict]:
     return rows
 
 
+def pde_storage_rows():
+    """Analytic bytes-moved-per-step rows, per stepper x storage format.
+
+    Pure metadata arithmetic — packs each stepper's initial state once to
+    measure the carried footprint; nothing is stepped or jitted.
+    """
+    import jax
+
+    from repro.pack import pack_state, state_nbytes
+    from repro.pde import get_stepper, known_steppers
+    from repro.precision import PRESETS
+
+    fmt = PRESETS["r2f2_16"].fmt
+    rows = []
+    for name in known_steppers():
+        stepper = get_stepper(name)
+        cfg = stepper.default_config()
+        state = jax.tree_util.tree_map(jax.numpy.asarray, stepper.init_state(cfg))
+        f32_bytes = 2 * state_nbytes(state)
+        packed_bytes = 2 * state_nbytes(pack_state(state, fmt))
+        for storage, nbytes in (("f32", f32_bytes), ("packed", packed_bytes)):
+            t_mem_us = nbytes / HBM_BW * 1e6
+            rows.append(
+                (
+                    f"roofline/pde/{name}/{storage}",
+                    t_mem_us,
+                    f"bytes_per_step={nbytes}"
+                    f";ratio_vs_f32={nbytes / f32_bytes:.3f}"
+                    f";hbm_bw_gbps={HBM_BW / 1e9:.0f}",
+                )
+            )
+    return rows
+
+
 def main():
+    print("# roofline — PDE carried-state HBM traffic per step (analytic)")
+    print("# us column = memory-roofline time of one step's state traffic")
+    for name, us, derived in pde_storage_rows():
+        print(f"{name},{us:.4f},{derived}")
+    print()
     print("# roofline — single-pod 16x16 (256 chips); terms in ms per step")
     print(
         f"{'cell':58s} {'comp':>7s} {'mem':>7s} {'coll':>7s} "

@@ -1,0 +1,15 @@
+"""repro.alu — the flexible-precision arithmetic plane beyond multiply.
+
+The paper substitutes only multiplications; this package extends the same
+``<EB, MB, FX>`` runtime-reconfigurable emulation to the remaining solver
+arithmetic — add/sub, divide, and rsqrt — with the Fig.-5 grow-and-retry
+law generalized per op (alignment-shift evidence for add, quotient-range
+evidence for divide; see :func:`repro.core.r2f2.op_bounds`). The
+:class:`repro.precision` engines and the fused ``blockops`` primitives both
+route through these functions, so the stepwise and in-kernel planes share
+one definition of every flexible op.
+"""
+
+from .flexops import flex_add, flex_div, flex_op, flex_rsqrt, flex_sub
+
+__all__ = ["flex_add", "flex_sub", "flex_div", "flex_rsqrt", "flex_op"]

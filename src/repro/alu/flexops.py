@@ -1,0 +1,107 @@
+"""Tile-wise flexible ALU ops — ``r2f2_multiply``'s shape for add/div/rsqrt.
+
+Semantics follow the repo's emulation convention for non-multiply arithmetic
+(established by the fixed-format engine): quantize the operands to the
+runtime format ``E(EB+k)M(MB+FX-k)``, perform the operation on the f32
+substrate, and quantize the result to the same format. There is no
+flexible-region tail approximation here — that approximation models dropped
+partial *products* (Fig. 4b) and has no analogue in an adder or divider
+datapath, so results are plain RNE roundings of the substrate op.
+
+``k=None`` selects, per tile, the minimal split covering the op's exponent
+envelope (:func:`repro.core.r2f2.select_k_op`) — the vectorized collapse of
+the paper's grow-and-retry loop, exactly as the multiplier does it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flexformat import FlexFormat, quantize_em_with_flags
+from repro.core.r2f2 import R2F2Stats, _tile_max_exp, select_k_op
+
+__all__ = ["flex_add", "flex_sub", "flex_div", "flex_rsqrt", "flex_op"]
+
+_SUBSTRATE = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "div": lambda a, b: a / b,
+    "rsqrt": lambda a, _b: jax.lax.rsqrt(a),
+}
+
+#: substrate op name -> the adjust-law envelope it is governed by
+#: (sub shares add's alignment-shift evidence; see DESIGN.md §13)
+_EVIDENCE_OP = {"add": "add", "sub": "add", "div": "div", "rsqrt": "rsqrt"}
+
+
+def flex_op(
+    a,
+    b,
+    fmt: FlexFormat,
+    op: str,
+    *,
+    k=None,
+    tile_shape: Optional[Tuple[int, ...]] = None,
+):
+    """Shared tile-wise driver. ``b`` is ignored for unary ops (rsqrt).
+
+    Returns ``(result, R2F2Stats)`` exactly like
+    :func:`repro.core.r2f2.r2f2_multiply`: per-tile chosen splits plus
+    overflow/underflow element counts (the adjust-up triggers).
+    """
+    if op not in _SUBSTRATE:
+        raise ValueError(f"unknown flex op {op!r}; known: {tuple(_SUBSTRATE)}")
+    ev_op = _EVIDENCE_OP[op]
+    a = jnp.asarray(a, jnp.float32)
+    unary = op == "rsqrt"
+    b = a if unary else jnp.broadcast_to(jnp.asarray(b, jnp.float32), a.shape)
+
+    if k is None:
+        ae, bcast_a = _tile_max_exp(a, tile_shape)
+        be = ae if unary else _tile_max_exp(b, tile_shape)[0]
+        k_tile = select_k_op(ae, be, fmt, ev_op)
+        k_full = bcast_a(k_tile)
+    else:
+        k_tile = jnp.asarray(k, jnp.int32)
+        k_full = jnp.broadcast_to(k_tile, a.shape) if k_tile.ndim == 0 else k_tile
+
+    e_bits = fmt.eb + k_full
+    m_bits = fmt.mb + fmt.fx - k_full
+
+    qa, oa, ua = quantize_em_with_flags(a, e_bits, m_bits)
+    if unary:
+        qb, ob, ub = qa, jnp.zeros_like(oa), jnp.zeros_like(ua)
+    else:
+        qb, ob, ub = quantize_em_with_flags(b, e_bits, m_bits)
+    r = _SUBSTRATE[op](qa, qb)
+    qr, orr, ur = quantize_em_with_flags(r, e_bits, m_bits)
+
+    stats = R2F2Stats(
+        k=k_tile,
+        overflow_count=jnp.sum(oa | ob | orr),
+        underflow_count=jnp.sum(ua | ub | ur),
+    )
+    return qr, stats
+
+
+def flex_add(a, b, fmt: FlexFormat, *, k=None, tile_shape=None):
+    """Flexible-precision addition (alignment-shift evidence law)."""
+    return flex_op(a, b, fmt, "add", k=k, tile_shape=tile_shape)
+
+
+def flex_sub(a, b, fmt: FlexFormat, *, k=None, tile_shape=None):
+    """Flexible-precision subtraction (shares the add envelope)."""
+    return flex_op(a, b, fmt, "sub", k=k, tile_shape=tile_shape)
+
+
+def flex_div(a, b, fmt: FlexFormat, *, k=None, tile_shape=None):
+    """Flexible-precision division (quotient-range evidence law)."""
+    return flex_op(a, b, fmt, "div", k=k, tile_shape=tile_shape)
+
+
+def flex_rsqrt(x, fmt: FlexFormat, *, k=None, tile_shape=None):
+    """Flexible-precision reciprocal square root (unary envelope)."""
+    return flex_op(x, None, fmt, "rsqrt", k=k, tile_shape=tile_shape)

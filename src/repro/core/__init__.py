@@ -26,12 +26,15 @@ from .flexformat import (
 )
 from .policy import PRESETS, PrecisionConfig, RangeTracker, tracker_init, tracker_k, tracker_update
 from .r2f2 import (
+    OPS,
     R2F2Stats,
     SequentialState,
+    op_bounds,
     product_guard_bits,
     r2f2_mul_sequential,
     r2f2_multiply,
     select_k,
+    select_k_op,
     select_k_operand,
 )
 from .rr_dot import rr_dot, rr_einsum, rr_operand

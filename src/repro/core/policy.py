@@ -28,7 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from .flexformat import FlexFormat, unbiased_exponent
-from .r2f2 import _needed_e_bits, _needed_e_bits_lo, _tile_max_exp, select_k  # noqa: F401
+from .r2f2 import (  # noqa: F401
+    _needed_e_bits,
+    _needed_e_bits_lo,
+    _tile_max_exp,
+    op_bounds,
+    select_k,
+)
 
 __all__ = [
     "PrecisionConfig",
@@ -168,33 +174,33 @@ def _k_for(hi, lo, fmt: FlexFormat):
     return e - fmt.eb
 
 
-def evidence_bounds(ae, be):
+def evidence_bounds(ae, be, op: str = "mul"):
     """One observation's exponent envelope ``(step_hi, step_lo)``: operand
-    cluster tops plus the product bound (same derivation as
-    :func:`repro.core.r2f2.select_k`). Vectorized over evidence arrays."""
-    ae = jnp.asarray(ae, jnp.float32)
-    be = jnp.asarray(be, jnp.float32)
-    step_hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
-    step_lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
-    return step_hi, step_lo
+    cluster tops plus the op's result bound (same derivation as
+    :func:`repro.core.r2f2.select_k`, generalized per op by
+    :func:`repro.core.r2f2.op_bounds`). Vectorized over evidence arrays."""
+    return op_bounds(ae, be, op)
 
 
-def evidence_k_need(ae, be, cfg: PrecisionConfig) -> jnp.ndarray:
+def evidence_k_need(ae, be, cfg: PrecisionConfig, op: str = "mul") -> jnp.ndarray:
     """Instantaneous split one site-level observation ``(ae, be)`` demands
     (headroom included) — the per-issue statistic the tracker grows toward
     and ``repro.profile``'s autotuner derives its floor/ceiling hints from.
     Vectorized: feed the whole captured evidence stream at once."""
-    step_hi, step_lo = evidence_bounds(ae, be)
+    step_hi, step_lo = evidence_bounds(ae, be, op)
     return _k_for(step_hi + cfg.headroom, step_lo - cfg.headroom, cfg.fmt)
 
 
 def tracker_observe(
-    state: RangeTracker, site: int, ae, be, cfg: PrecisionConfig
+    state: RangeTracker, site: int, ae, be, cfg: PrecisionConfig, op: str = "mul"
 ) -> RangeTracker:
-    """Fold one multiplication's operand max-exponent evidence ``(ae, be)``
+    """Fold one operation's operand max-exponent evidence ``(ae, be)``
     into the tracker and re-pick the site's split, mirroring the paper's
     adjust unit across steps: grow immediately on demand (overflow
     semantics), shrink only when the EMA shows persistent redundancy.
+    ``op`` picks the envelope law — alignment-shift for add, quotient-range
+    for div (see :data:`repro.core.r2f2.OPS`); the default keeps the
+    paper's multiply semantics.
 
     The evidence is exactly what the fused Pallas kernels emit per substep
     (per-site max-exponent reductions, cross-block maxed), so the fused
@@ -202,7 +208,7 @@ def tracker_observe(
     apply identical adjust-unit math.
     """
     fmt = cfg.fmt
-    step_hi, step_lo = evidence_bounds(ae, be)
+    step_hi, step_lo = evidence_bounds(ae, be, op)
 
     hi_ema = cfg.ema * state.hi_ema[site] + (1.0 - cfg.ema) * step_hi
     hi_ema = jnp.maximum(hi_ema, step_hi)  # never smooth away a spike
@@ -231,12 +237,12 @@ def tracker_observe(
 
 
 def tracker_update(
-    state: RangeTracker, site: int, a, b, cfg: PrecisionConfig
+    state: RangeTracker, site: int, a, b, cfg: PrecisionConfig, op: str = "mul"
 ) -> RangeTracker:
-    """Fold the live ranges of a multiplication site into the tracker
+    """Fold the live ranges of an arithmetic site into the tracker
     (reduce the operands to max-exponent evidence, then
     :func:`tracker_observe`)."""
-    return tracker_observe(state, site, _site_max_exp(a), _site_max_exp(b), cfg)
+    return tracker_observe(state, site, _site_max_exp(a), _site_max_exp(b), cfg, op)
 
 
 def tracker_k(state: RangeTracker, site: int) -> jnp.ndarray:

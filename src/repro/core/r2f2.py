@@ -44,12 +44,22 @@ from .flexformat import (
 __all__ = [
     "R2F2Stats",
     "product_guard_bits",
+    "OPS",
+    "op_bounds",
     "select_k",
+    "select_k_op",
     "select_k_operand",
     "r2f2_multiply",
     "r2f2_mul_sequential",
     "SequentialState",
 ]
+
+#: Operations the adjust unit knows an exponent envelope for. ``"mul"`` is
+#: the paper's op; the rest generalize the Fig.-5 law to the remaining
+#: solver arithmetic (repro.alu): alignment-shift evidence for add/sub,
+#: quotient-range evidence for divide, and the halved-exponent envelope for
+#: rsqrt.
+OPS = ("mul", "add", "div", "rsqrt")
 
 
 class R2F2Stats(NamedTuple):
@@ -112,6 +122,54 @@ def select_k(a_max_exp, b_max_exp, fmt: FlexFormat):
     """
     hi = jnp.maximum(jnp.maximum(a_max_exp, b_max_exp), a_max_exp + b_max_exp + 1)
     lo = jnp.minimum(jnp.minimum(a_max_exp, b_max_exp), a_max_exp + b_max_exp)
+    e = jnp.maximum(
+        _needed_e_bits(hi, fmt.eb, fmt.fx), _needed_e_bits_lo(lo, fmt.eb, fmt.fx)
+    )
+    return e - fmt.eb
+
+
+def op_bounds(ae, be, op: str = "mul"):
+    """Exponent envelope ``(hi, lo)`` an operation on value clusters topped
+    at exponents ``(ae, be)`` must cover — the per-op generalization of
+    :func:`select_k`'s product bound. All arithmetic is f32 (exact for
+    exponent-sized integers), so int32 and f32 evidence agree bit-for-bit.
+
+    mul:   product of tops is < 2**(ae+be+2) and >= 2**(ae+be).
+    add:   alignment-shift evidence — the sum's top can carry out one bit
+           above the larger operand; cancellation tails flush gradually like
+           any distribution tail, so the low side is the smaller operand top.
+    div:   quotient-range evidence — |a/b| for cluster tops lies within
+           2**(ae-be-1) .. 2**(ae-be+1), and both operands must stay normal.
+    rsqrt: unary (callers pass ``be = ae``) — the result exponent is
+           ~ -ae/2, so the envelope spans the operand top and the halved,
+           negated top on both sides.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown alu op {op!r}; known: {OPS}")
+    ae = jnp.asarray(ae, jnp.float32)
+    be = jnp.asarray(be, jnp.float32)
+    if op == "mul":
+        hi = jnp.maximum(jnp.maximum(ae, be), ae + be + 1)
+        lo = jnp.minimum(jnp.minimum(ae, be), ae + be)
+    elif op == "add":
+        hi = jnp.maximum(ae, be) + 1
+        lo = jnp.minimum(ae, be)
+    elif op == "div":
+        hi = jnp.maximum(jnp.maximum(ae, be), ae - be + 1)
+        lo = jnp.minimum(jnp.minimum(ae, be), ae - be - 1)
+    else:  # rsqrt
+        r_hi = jnp.ceil(-ae / 2.0)
+        r_lo = jnp.floor(-(ae + 1.0) / 2.0)
+        hi = jnp.maximum(ae, r_hi)
+        lo = jnp.minimum(ae, r_lo)
+    return hi, lo
+
+
+def select_k_op(a_max_exp, b_max_exp, fmt: FlexFormat, op: str = "mul"):
+    """Minimal flexible split covering one operation's exponent envelope —
+    :func:`select_k` generalized over :data:`OPS` via :func:`op_bounds`.
+    ``select_k_op(ae, be, fmt, "mul")`` equals ``select_k(ae, be, fmt)``."""
+    hi, lo = op_bounds(a_max_exp, b_max_exp, op)
     e = jnp.maximum(
         _needed_e_bits(hi, fmt.eb, fmt.fx), _needed_e_bits_lo(lo, fmt.eb, fmt.fx)
     )

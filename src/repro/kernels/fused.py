@@ -48,7 +48,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.flexformat import quantize_em
-from repro.kernels.blockops import block_max_exp, rr_mul_block
+from repro.kernels.blockops import (
+    block_max_exp,
+    rr_add_block,
+    rr_div_block,
+    rr_mul_block,
+    rr_rsqrt_block,
+)
+from repro.pack.packed import (
+    PackedArray,
+    block_storage_k,
+    pack_block,
+    payload_dtype,
+    unpack_block,
+)
 from repro.precision.fusion import fused_family
 from repro.profile.capture import pair_exp_hist
 
@@ -77,16 +90,19 @@ class FusedOps:
     """
 
     __slots__ = (
-        "prec", "sites", "family", "k_floor", "collect", "capture", "valid",
-        "evidence", "counts",
+        "prec", "sites", "site_ops", "family", "k_floor", "collect", "capture",
+        "valid", "evidence", "counts",
     )
 
     def __init__(
         self, prec, sites: Tuple[str, ...], k_floor=None, collect=False,
-        capture=None, valid=None,
+        capture=None, valid=None, site_ops=None,
     ):
         self.prec = prec
         self.sites = tuple(sites)
+        #: per-site declared op ("mul"/"add"/"div"/"rsqrt") — when given, a
+        #: body calling the wrong method at a site fails at trace time
+        self.site_ops = None if site_ops is None else tuple(site_ops)
         self.family = fused_family(prec.mode)
         if self.family is None:
             raise ValueError(
@@ -132,13 +148,23 @@ class FusedOps:
             m = c if m is None else (m & c)
         return m
 
-    def mul(self, a, b, site: str):
-        """Product of two blocks on the policy's multiplier at a named site."""
+    def _record(self, a, b, site: str, op: str):
+        """Broadcast the operands, check the site's declared op, and record
+        evidence/counts. Returns ``(a, b, exps)`` with ``exps`` the block max
+        exponents (None when neither the rr family nor collection needs them).
+        """
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         shape = jnp.broadcast_shapes(a.shape, b.shape)
         a = jnp.broadcast_to(a, shape)
         b = jnp.broadcast_to(b, shape)
+        if self.site_ops is not None:
+            declared = self.site_ops[self.sites.index(site)]
+            if declared != op:
+                raise ValueError(
+                    f"site {site!r} is declared as a {declared!r} op but the "
+                    f"fused body called ops.{op} there"
+                )
 
         exps = None
         if self.collect or self.family == "rr":
@@ -149,7 +175,16 @@ class FusedOps:
             self.evidence[site] = tuple(e.astype(jnp.float32) for e in exps)
         if self.capture is not None:
             self.counts[site] = pair_exp_hist(a, b, self.capture, self._valid_mask(shape))
+        return a, b, exps
 
+    def _k_floor_at(self, site: str):
+        if self.k_floor is None:
+            return None
+        return self.k_floor[self.sites.index(site)]
+
+    def mul(self, a, b, site: str):
+        """Product of two blocks on the policy's multiplier at a named site."""
+        a, b, exps = self._record(a, b, site, "mul")
         if self.family == "f32":
             return a * b
         if self.family == "bf16":
@@ -161,27 +196,80 @@ class FusedOps:
         # construction and floored at the carried adjust-unit split. Under
         # cfg.pinned the carried split IS the split (static profiled
         # deployment — no live widen), mirroring the reference plane.
-        k_min = None
-        if self.k_floor is not None:
-            k_min = self.k_floor[self.sites.index(site)]
+        k_min = self._k_floor_at(site)
         if self.prec.pinned and k_min is not None:
             return rr_mul_block(
                 a, b, self.prec.fmt, self.prec.tail_approx, exps=exps, k_fixed=k_min
             )
         return rr_mul_block(a, b, self.prec.fmt, self.prec.tail_approx, exps=exps, k_min=k_min)
 
+    def _alu(self, a, b, site: str, op: str, substrate, rr_block):
+        """Shared family dispatch for the repro.alu ops (add/div/rsqrt):
+        same structure as :meth:`mul`, with the rr family routed through the
+        op's own blockops primitive (per-op exponent envelope, no tail
+        truncation — adder/divider datapaths drop no partial products)."""
+        a, b, exps = self._record(a, b, site, op)
+        if self.family == "f32":
+            return substrate(a, b)
+        if self.family == "bf16":
+            return substrate(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)).astype(
+                jnp.float32
+            )
+        if self.family == "fixed":
+            e, m = self.prec.fixed_em
+            return quantize_em(substrate(quantize_em(a, e, m), quantize_em(b, e, m)), e, m)
+        k_min = self._k_floor_at(site)
+        if self.prec.pinned and k_min is not None:
+            return rr_block(a, b, self.prec.fmt, exps=exps, k_fixed=k_min)
+        return rr_block(a, b, self.prec.fmt, exps=exps, k_min=k_min)
+
+    def add(self, a, b, site: str):
+        """Sum of two blocks on the policy's flexible adder at a named site
+        (alignment-shift evidence law)."""
+        return self._alu(a, b, site, "add", lambda x, y: x + y, rr_add_block)
+
+    def div(self, a, b, site: str):
+        """Quotient of two blocks on the policy's flexible divider at a
+        named site (quotient-range evidence law)."""
+        return self._alu(a, b, site, "div", lambda x, y: x / y, rr_div_block)
+
+    def rsqrt(self, x, site: str):
+        """Reciprocal square root of one block on the policy's datapath at a
+        named site; the unary evidence is the operand exponent doubled."""
+        return self._alu(
+            x,
+            x,
+            site,
+            "rsqrt",
+            lambda v, _w: jax.lax.rsqrt(v),
+            lambda a, b, fmt, **kw: rr_rsqrt_block(a, fmt, **kw),
+        )
+
 
 def _sweep_kernel(
-    *refs, body, prec, sites, steps, n_state, n_out, collect, capture, has_floor, extent
+    *refs, body, prec, sites, site_ops, steps, n_state, n_out, collect, capture,
+    has_floor, extent, packed,
 ):
-    state_refs = refs[:n_state]
-    pos = n_state
+    if packed:
+        # packed storage: payload + per-leaf storage split arrive instead of
+        # f32 state; the prologue decodes in-VMEM (DESIGN.md §13)
+        pay_refs = refs[:n_state]
+        ks_refs = refs[n_state : 2 * n_state]
+        pos = 2 * n_state
+    else:
+        state_refs = refs[:n_state]
+        pos = n_state
     k_floor = None
     if has_floor:
         k_floor = refs[pos][...][0]  # (n_sites,) int32
         pos += 1
-    out_refs = refs[pos : pos + n_out]
-    pos += n_out
+    if packed:
+        out_refs = refs[pos : pos + n_out]
+        kout_refs = refs[pos + n_out : pos + 2 * n_out]
+        pos += 2 * n_out
+    else:
+        out_refs = refs[pos : pos + n_out]
+        pos += n_out
     ev_ref = cnt_ref = None
     if collect:
         ev_ref = refs[pos]
@@ -189,7 +277,14 @@ def _sweep_kernel(
     if capture is not None:
         cnt_ref = refs[pos]
 
-    state = tuple(r[...] for r in state_refs)
+    if packed:
+        # prologue: unpack each leaf at its carried storage split
+        state = tuple(
+            unpack_block(pr[...], prec.fmt, kr[...][0, 0])
+            for pr, kr in zip(pay_refs, ks_refs)
+        )
+    else:
+        state = tuple(r[...] for r in state_refs)
     n_sites = len(sites)
     # evidence/counts carried functionally through the substep loop, written once
     ev0 = jnp.zeros((steps, n_sites, 2) if collect else (1,), jnp.float32)
@@ -215,7 +310,8 @@ def _sweep_kernel(
     def substep(s, carry):
         st, ev, cnt = carry
         ops = FusedOps(
-            prec, sites, k_floor=k_floor, collect=collect, capture=capture, valid=valid
+            prec, sites, k_floor=k_floor, collect=collect, capture=capture,
+            valid=valid, site_ops=site_ops,
         )
         new = body(st, ops)
         if not isinstance(new, tuple):
@@ -249,8 +345,17 @@ def _sweep_kernel(
                 f"({n_state} != {n_out}): the output is the next substep's input"
             )
         state, ev, cnt = jax.lax.fori_loop(0, steps, substep, (state, ev0, cnt0))
-    for r, v in zip(out_refs, state):
-        r[...] = v
+    if packed:
+        # epilogue: re-pick each leaf's storage split from the advanced
+        # values and encode — identical math to repro.pack's XLA-boundary
+        # pack (shared helpers), so in-kernel packing can never disagree
+        for pr, kr, v in zip(out_refs, kout_refs, state):
+            k_st = block_storage_k(v, prec.fmt)
+            pr[...] = pack_block(v, prec.fmt, k_st).astype(payload_dtype(prec.fmt))
+            kr[...] = jnp.reshape(k_st, (1, 1)).astype(jnp.int32)
+    else:
+        for r, v in zip(out_refs, state):
+            r[...] = v
     if collect:
         ev_ref[...] = ev[None, None]  # (1, 1, steps, n_sites, 2) block
     if capture is not None:
@@ -259,10 +364,11 @@ def _sweep_kernel(
 
 def fused_sweep(
     body: Callable,
-    state: Sequence[jnp.ndarray],
+    state: Sequence,
     *,
     prec,
     sites: Tuple[str, ...],
+    site_ops: Optional[Tuple[str, ...]] = None,
     steps: int = 1,
     block: Tuple[int, int],
     n_out: Optional[int] = None,
@@ -271,6 +377,7 @@ def fused_sweep(
     collect_evidence: bool = False,
     capture=None,
     interpret: Optional[bool] = None,
+    storage: str = "f32",
 ):
     """Run ``steps`` substeps of ``body`` over blocked state in ONE
     ``pallas_call``.
@@ -302,24 +409,80 @@ def fused_sweep(
         masked out of the counts (zero pads by the zero-exponent
         convention, non-zero pads by the in-kernel valid-lane mask), so a
         padded grid profiles identically to the reference plane.
+      site_ops: per-site op declarations (``"mul"``/``"add"``/``"div"``/
+        ``"rsqrt"``) — when given, a body calling the wrong ``ops`` method
+        at a site fails at trace time.
+      storage: ``"f32"`` (default) moves f32 state through HBM; ``"packed"``
+        takes :class:`repro.pack.PackedArray` leaves instead, decodes them
+        in the kernel prologue, and re-packs the advanced state in the
+        epilogue at a freshly-picked per-leaf storage split — HBM traffic
+        at ``fmt.total_bits`` instead of 32 (the fusion-boundary rule,
+        DESIGN.md §13). Requires the block to cover the whole field (one
+        storage block == one sweep block) and ``n_out == n_state``.
 
     Returns ``(out_leaves_tuple, evidence_or_None)``, plus a trailing
-    ``counts`` element when ``capture`` is set.
+    ``counts`` element when ``capture`` is set. Under ``storage="packed"``
+    the out leaves are PackedArrays carrying the input leaves' geometry.
     """
     interpret = resolve_interpret(interpret)
     collect_evidence = bool(collect_evidence) or capture is not None
-    leaves = [jnp.asarray(x, jnp.float32) for x in state]
-    rows, width = leaves[0].shape
+    if storage not in ("f32", "packed"):
+        raise ValueError(f"unknown fused storage {storage!r}; 'f32' | 'packed'")
+    packed = storage == "packed"
+    n_sites = len(sites)
+    if site_ops is not None:
+        site_ops = tuple(site_ops)
+        if len(site_ops) != n_sites:
+            raise ValueError(
+                f"site_ops covers {len(site_ops)} entries for {n_sites} sites"
+            )
+
+    if packed:
+        pas = list(state)
+        for pa in pas:
+            if not isinstance(pa, PackedArray):
+                raise TypeError(
+                    "storage='packed' takes repro.pack.PackedArray leaves; "
+                    f"got {type(pa).__name__}"
+                )
+            if pa.fmt != prec.fmt:
+                raise ValueError(
+                    f"packed leaf format {pa.fmt} disagrees with the policy "
+                    f"format {prec.fmt}"
+                )
+        leaves = [pa.payload for pa in pas]
+        rows, width = leaves[0].shape
+    else:
+        leaves = [jnp.asarray(x, jnp.float32) for x in state]
+        rows, width = leaves[0].shape
     for x in leaves[1:]:
         if x.shape != (rows, width):
             raise ValueError(f"state leaves disagree: {x.shape} vs {(rows, width)}")
     n_state = len(leaves)
     n_out = n_state if n_out is None else n_out
-    n_sites = len(sites)
 
     br = min(block[0], rows)
     bw = min(block[1], width)
     pr, pw = -rows % br, -width % bw
+    if packed:
+        if (br, bw) != (rows, width):
+            raise ValueError(
+                "in-kernel packed storage requires the sweep block to cover "
+                f"the whole field: block {(br, bw)} vs state {(rows, width)} "
+                "(one storage block per leaf)"
+            )
+        if n_out != n_state:
+            raise ValueError(
+                "in-kernel packed storage needs body in/out leaf counts to "
+                f"match ({n_state} != {n_out}): every out leaf re-packs"
+            )
+        for pa in pas:
+            if tuple(pa.k.shape[-2:]) != (1, 1):
+                raise ValueError(
+                    "in-kernel packed storage takes single-block PackedArrays "
+                    f"(one split per leaf); got k of shape {tuple(pa.k.shape)}"
+                )
+        pr = pw = 0
     if pr or pw:
         pv = tuple(pad_values) if pad_values is not None else (0.0,) * n_state
         leaves = [
@@ -330,13 +493,23 @@ def fused_sweep(
     gi, gj = rp // br, wp // bw
 
     state_spec = pl.BlockSpec((br, bw), lambda i, j: (i, j))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     in_specs = [state_spec] * n_state
     inputs = list(leaves)
+    if packed:
+        in_specs += [scalar_spec] * n_state
+        inputs += [jnp.reshape(pa.k, (1, 1)).astype(jnp.int32) for pa in pas]
     if k_floor is not None:
         in_specs.append(pl.BlockSpec((1, n_sites), lambda i, j: (0, 0)))
         inputs.append(jnp.asarray(k_floor, jnp.int32).reshape(1, n_sites))
     out_specs = [state_spec] * n_out
-    out_shape = [jax.ShapeDtypeStruct((rp, wp), jnp.float32)] * n_out
+    if packed:
+        pdt = payload_dtype(prec.fmt)
+        out_shape = [jax.ShapeDtypeStruct((rp, wp), pdt)] * n_out
+        out_specs += [scalar_spec] * n_out
+        out_shape += [jax.ShapeDtypeStruct((1, 1), jnp.int32)] * n_out
+    else:
+        out_shape = [jax.ShapeDtypeStruct((rp, wp), jnp.float32)] * n_out
     if collect_evidence:
         out_specs.append(
             pl.BlockSpec((1, 1, steps, n_sites, 2), lambda i, j: (i, j, 0, 0, 0))
@@ -355,6 +528,7 @@ def fused_sweep(
             body=body,
             prec=prec,
             sites=tuple(sites),
+            site_ops=site_ops,
             steps=steps,
             n_state=n_state,
             n_out=n_out,
@@ -362,6 +536,7 @@ def fused_sweep(
             capture=capture,
             has_floor=k_floor is not None,
             extent=(rows if pr else None, width if pw else None) if (pr or pw) else None,
+            packed=packed,
         ),
         grid=(gi, gj),
         in_specs=in_specs,
@@ -381,7 +556,15 @@ def fused_sweep(
         # block maxes); padded-only blocks contribute their pad constants'
         # exponents, which the pad_values contract keeps dominated
         evidence = jnp.max(outs.pop(), axis=(0, 1))
-    if pr or pw:
+    if packed:
+        # reassemble PackedArrays around the epilogue's (payload, split)
+        # pairs, carrying each input leaf's logical geometry forward
+        k_outs = outs[n_out:]
+        outs = [
+            PackedArray(p, jnp.reshape(kk, pa.k.shape), pa.fmt, pa.shape, pa.block)
+            for p, kk, pa in zip(outs[:n_out], k_outs, pas)
+        ]
+    elif pr or pw:
         outs = [o[:rows, :width] for o in outs]
     if capture is not None:
         return tuple(outs), evidence, counts

@@ -59,6 +59,7 @@ def _heat1d_body(alpha, dtodx2, sites):
         "collect_evidence",
         "capture",
         "interpret",
+        "storage",
     ),
 )
 def heat1d_sweep(
@@ -74,12 +75,17 @@ def heat1d_sweep(
     collect_evidence=False,
     capture=None,
     interpret=None,
+    storage="f32",
 ):
     """Fused-plane entry: advance (rows, nx) rod states ``steps`` substeps.
 
     Returns ``(u, evidence)`` — the stepper's ``fused_step`` contract —
     plus a trailing ``(n_sites, 2, n_bins)`` exponent-count array when a
-    ``capture`` spec is given (range-distribution profiling).
+    ``capture`` spec is given (range-distribution profiling). With
+    ``storage="packed"`` the rod state comes and goes as a
+    :class:`repro.pack.PackedArray` (single storage block — so the sweep
+    block must cover the field: ``block_rows >= rows``), unpacked in the
+    kernel prologue and re-packed in its epilogue.
     """
     res = fused.fused_sweep(
         _heat1d_body(float(alpha), float(dtodx2), sites),
@@ -92,6 +98,7 @@ def heat1d_sweep(
         collect_evidence=collect_evidence,
         capture=capture,
         interpret=interpret,
+        storage=storage,
     )
     if capture is not None:
         (out,), ev, counts = res

@@ -60,7 +60,8 @@ def _heat2d_body(nx, ny, alpha, dtodx2, sites):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "alpha", "dtodx2", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+        "alpha", "dtodx2", "prec", "steps", "sites", "collect_evidence", "capture",
+        "interpret", "storage",
     ),
 )
 def heat2d_sweep(
@@ -75,15 +76,21 @@ def heat2d_sweep(
     collect_evidence=False,
     capture=None,
     interpret=None,
+    storage="f32",
 ):
     """Advance a (nx, ny) field ``steps`` 5-point explicit-FD substeps.
 
     Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
+    ``storage="packed"`` takes and returns the field as a single-block
+    :class:`repro.pack.PackedArray`, re-viewed to the kernel's flattened
+    ``(1, nx*ny)`` leaf (same split either way — one block).
     """
+    packed = storage == "packed"
     nx, ny = u0.shape
+    lead = u0.with_view((1, nx * ny)) if packed else u0.reshape(1, nx * ny)
     res = fused.fused_sweep(
         _heat2d_body(nx, ny, float(alpha), float(dtodx2), sites),
-        (u0.reshape(1, nx * ny),),
+        (lead,),
         prec=prec,
         sites=sites,
         steps=steps,
@@ -92,12 +99,13 @@ def heat2d_sweep(
         collect_evidence=collect_evidence,
         capture=capture,
         interpret=interpret,
+        storage=storage,
     )
     if capture is not None:
         (out,), ev, counts = res
-        return out.reshape(nx, ny), ev, counts
+        return (out.with_view((nx, ny)) if packed else out.reshape(nx, ny)), ev, counts
     (out,), ev = res
-    return out.reshape(nx, ny), ev
+    return (out.with_view((nx, ny)) if packed else out.reshape(nx, ny)), ev
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +129,8 @@ def _advection1d_body(speed, dtodx, sites):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "speed", "dtodx", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+        "speed", "dtodx", "prec", "steps", "sites", "collect_evidence", "capture",
+        "interpret", "storage",
     ),
 )
 def advection1d_sweep(
@@ -136,28 +145,34 @@ def advection1d_sweep(
     collect_evidence=False,
     capture=None,
     interpret=None,
+    storage="f32",
 ):
     """Advance a (nx,) periodic profile ``steps`` upwind substeps.
 
     Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
+    ``storage="packed"`` takes/returns a single-block PackedArray profile.
     """
+    packed = storage == "packed"
+    n = u0.shape[0]
+    lead = u0.with_view((1, n)) if packed else u0[None, :]
     res = fused.fused_sweep(
         _advection1d_body(float(speed), float(dtodx), sites),
-        (u0[None, :],),
+        (lead,),
         prec=prec,
         sites=sites,
         steps=steps,
-        block=(1, u0.shape[0]),
+        block=(1, n),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
         capture=capture,
         interpret=interpret,
+        storage=storage,
     )
     if capture is not None:
         (out,), ev, counts = res
-        return out[0], ev, counts
+        return (out.with_view((n,)) if packed else out[0]), ev, counts
     (out,), ev = res
-    return out[0], ev
+    return (out.with_view((n,)) if packed else out[0]), ev
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +197,8 @@ def _burgers1d_body(dt, dx, sites):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "dt", "dx", "prec", "steps", "sites", "collect_evidence", "capture", "interpret",
+        "dt", "dx", "prec", "steps", "sites", "collect_evidence", "capture",
+        "interpret", "storage",
     ),
 )
 def burgers1d_sweep(
@@ -197,25 +213,31 @@ def burgers1d_sweep(
     collect_evidence=False,
     capture=None,
     interpret=None,
+    storage="f32",
 ):
     """Advance a (nx,) periodic wave ``steps`` Lax-Friedrichs substeps.
 
     Returns ``(u, evidence)`` (+ exponent counts when ``capture`` is set).
+    ``storage="packed"`` takes/returns a single-block PackedArray wave.
     """
+    packed = storage == "packed"
+    n = u0.shape[0]
+    lead = u0.with_view((1, n)) if packed else u0[None, :]
     res = fused.fused_sweep(
         _burgers1d_body(float(dt), float(dx), sites),
-        (u0[None, :],),
+        (lead,),
         prec=prec,
         sites=sites,
         steps=steps,
-        block=(1, u0.shape[0]),
+        block=(1, n),
         k_floor=k_floor,
         collect_evidence=collect_evidence,
         capture=capture,
         interpret=interpret,
+        storage=storage,
     )
     if capture is not None:
         (out,), ev, counts = res
-        return out[0], ev, counts
+        return (out.with_view((n,)) if packed else out[0]), ev, counts
     (out,), ev = res
-    return out[0], ev
+    return (out.with_view((n,)) if packed else out[0]), ev

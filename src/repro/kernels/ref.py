@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.flexformat import quantize_em, unbiased_exponent
-from repro.core.r2f2 import product_guard_bits, select_k, select_k_operand
+from repro.core.r2f2 import product_guard_bits, select_k, select_k_op, select_k_operand
 
 
 def _max_exp(t):
@@ -107,7 +107,9 @@ def heat_stencil_ref(u0, alpha, dtodx2, *, fmt, steps=1, block_rows=8, tail_appr
 
 
 def swe_flux_ref(q1, q3, *, fmt, block=(64, 128), tail_approx=True):
-    """Oracle for swe_flux_pallas: per-block momentum flux with R2F2 muls."""
+    """Oracle for swe_flux_pallas: per-block momentum flux with R2F2 muls
+    and the flexible divide (shared split under the quotient-range envelope,
+    no tail truncation — dividers have no partial-product tail to drop)."""
     q1 = jnp.asarray(q1, jnp.float32)
     q3 = jnp.asarray(q3, jnp.float32)
     m, n = q1.shape
@@ -122,12 +124,19 @@ def swe_flux_ref(q1, q3, *, fmt, block=(64, 128), tail_approx=True):
             e_b, m_b, tail_trunc_bits=guard,
         )
 
+    def rr_div(a, b):
+        k = select_k_op(_max_exp(a), _max_exp(b), fmt, "div")
+        e_b, m_b = fmt.eb + k, fmt.mb + fmt.fx - k
+        return quantize_em(
+            quantize_em(a, e_b, m_b) / quantize_em(b, e_b, m_b), e_b, m_b
+        )
+
     out = jnp.zeros((m, n), jnp.float32)
     for i in range(m // bm):
         for j in range(n // bn):
             a = q1[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn]
             h = q3[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn]
-            t2 = rr_mul(a, a) / h
+            t2 = rr_div(rr_mul(a, a), h)
             t3 = rr_mul(h, h)
             t4 = rr_mul(jnp.full_like(t3, 0.5 * 9.81), t3)
             out = out.at[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn].set(t2 + t4)

@@ -6,11 +6,13 @@ The paper's substituted sub-equation (§5.3) is the SWE hot spot:
     Ux_mx = q1*q1/q3 + 0.5*g*q3*q3
 
 This kernel fuses, per VMEM block: the three policy multiplications (q1*q1,
-q3*q3 and g/2*(q3*q3), each with a block-shared runtime split), the f32
-division, and the add — one HBM round trip for the whole flux field instead
-of five. The body is purely elementwise, so both axes tile freely;
-non-divisible shapes are padded (q3 with 1.0 so the padded divisor stays
-finite and can't dominate a mixed block's range reduction) and cropped.
+q3*q3 and g/2*(q3*q3), each with a block-shared runtime split), the policy
+division (the ``repro.alu`` flexible divider — its split picked under the
+quotient-range envelope at the ``swe.div`` site), and the add — one HBM
+round trip for the whole flux field instead of five. The body is purely
+elementwise, so both axes tile freely; non-divisible shapes are padded (q3
+with 1.0 so the padded divisor stays finite and can't dominate a mixed
+block's range reduction) and cropped.
 
 Blocks are (bm, bn) tiles over the 2D field, (8, 128)-aligned.
 """
@@ -26,16 +28,19 @@ from repro.kernels.blockops import rr_mul_block  # noqa: F401 — shared block m
 G_GRAV = 9.81
 DEFAULT_BLOCK = (64, 128)
 
-SWE_SITES = ("swe.q1q1", "swe.q3q3", "swe.gq3")
+SWE_SITES = ("swe.q1q1", "swe.q3q3", "swe.gq3", "swe.div")
+#: per-site ops aligned with SWE_SITES — the division is a first-class
+#: policy op now (repro.alu), no longer a raw-f32 bystander
+SWE_OPS = ("mul", "mul", "mul", "div")
 
 
 def _swe_flux_body(sites):
-    q1q1_site, q3q3_site, gq3_site = sites
+    q1q1_site, q3q3_site, gq3_site, div_site = sites
 
     def body(state, ops):
         q1, q3 = state
         t1 = ops.mul(q1, q1, q1q1_site)  # multiplier 1
-        t2 = t1 / q3  # f32 divider (R2F2 is a multiplier)
+        t2 = ops.div(t1, q3, div_site)  # flexible divider (quotient envelope)
         t3 = ops.mul(q3, q3, q3q3_site)  # multiplier 2
         t4 = ops.mul(jnp.full_like(t3, 0.5 * G_GRAV), t3, gq3_site)  # mult 3
         return (t2 + t4,)
@@ -50,6 +55,7 @@ def swe_flux_fused(
     prec,
     block=None,
     sites=SWE_SITES,
+    site_ops=SWE_OPS,
     k_floor=None,
     collect_evidence=False,
     capture=None,
@@ -68,6 +74,7 @@ def swe_flux_fused(
         (q1, q3),
         prec=prec,
         sites=sites,
+        site_ops=site_ops,
         steps=1,
         block=block,
         n_out=1,

@@ -1,0 +1,39 @@
+"""repro.pack — packed R2F2 storage: solver state at the carried split.
+
+The arithmetic side of the paper halves operand width; this package halves
+*storage*: solver state is carried between chunk boundaries, snapshots, and
+``repro.ckpt`` evictions as a :class:`PackedArray` — the ``total_bits``-wide
+bit payload of :func:`repro.core.flexformat.pack_r2f2` (uint16 for all
+<=16-bit formats) plus per-block split metadata — instead of f32.
+"""
+
+from .packed import (
+    PackedArray,
+    block_storage_k,
+    is_packed,
+    pack_array,
+    pack_block,
+    pack_state,
+    payload_dtype,
+    storage_quantize,
+    state_nbytes,
+    unpack_array,
+    unpack_block,
+    unpack_state,
+)
+
+__all__ = [
+    "PackedArray",
+    "pack_array",
+    "unpack_array",
+    "pack_state",
+    "unpack_state",
+    "storage_quantize",
+    "is_packed",
+    "state_nbytes",
+    # block-level helpers shared with the fused sweep prologue/epilogue
+    "payload_dtype",
+    "block_storage_k",
+    "pack_block",
+    "unpack_block",
+]

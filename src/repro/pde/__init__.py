@@ -20,7 +20,7 @@ from .burgers1d import BurgersConfig, initial_wave
 from .heat1d import HeatConfig, heat_step
 from .heat1d import simulate as simulate_heat
 from .heat2d import Heat2DConfig, initial_condition_2d
-from .precision_ops import pdiv, pmul, pstore
+from .precision_ops import padd, pdiv, pmul, pstore
 from .swe2d import SWEConfig, swe_step
 from .swe2d import simulate as simulate_swe
 
@@ -49,4 +49,5 @@ __all__ = [
     "pmul",
     "pstore",
     "pdiv",
+    "padd",
 ]

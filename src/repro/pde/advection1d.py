@@ -61,9 +61,11 @@ class Advection1DStepper(Stepper):
     """Flux-form first-order upwind on a periodic domain."""
 
     sites = ("adv.flux", "adv.update")
+    site_ops = ("mul", "mul")
     failure_mode = "overflow"
     story = "flux operand is the 1e5-peak field itself; E5M10 infs the flux"
     snapshots_default = 8
+    fused_packed = True  # the sweep kernel unpacks/repacks in VMEM
 
     def default_config(self) -> AdvectionConfig:
         return AdvectionConfig()
@@ -88,6 +90,7 @@ class Advection1DStepper(Stepper):
         collect_evidence: bool = False,
         capture=None,
         interpret=None,
+        storage: str = "f32",
     ):
         from repro.kernels.pde_steps import advection1d_sweep  # lazy: pallas off cold paths
 
@@ -102,4 +105,5 @@ class Advection1DStepper(Stepper):
             collect_evidence=collect_evidence,
             capture=capture,
             interpret=interpret,
+            storage=storage,
         )

@@ -57,9 +57,11 @@ class Burgers1DStepper(Stepper):
     """Conservative Lax-Friedrichs update on a periodic domain."""
 
     sites = ("burgers.uu", "burgers.flux")
+    site_ops = ("mul", "mul")
     failure_mode = "nonlinear-drift"
     story = "u*u squares the range, overflows E5M10, then decays ~1/t post-shock"
     snapshots_default = 8
+    fused_packed = True  # the sweep kernel unpacks/repacks in VMEM
 
     def default_config(self) -> BurgersConfig:
         return BurgersConfig()
@@ -85,6 +87,7 @@ class Burgers1DStepper(Stepper):
         collect_evidence: bool = False,
         capture=None,
         interpret=None,
+        storage: str = "f32",
     ):
         from repro.kernels.pde_steps import burgers1d_sweep  # lazy: pallas off cold paths
 
@@ -99,4 +102,5 @@ class Burgers1DStepper(Stepper):
             collect_evidence=collect_evidence,
             capture=capture,
             interpret=interpret,
+            storage=storage,
         )

@@ -82,9 +82,11 @@ class Heat1DStepper(Stepper):
     """
 
     sites = ("heat.flux", "heat.update")
+    site_ops = ("mul", "mul")
     failure_mode = "underflow"
     story = "alpha*lap falls below E5M10's subnormal floor late in the run"
     snapshots_default = 8
+    fused_packed = True  # the sweep kernel unpacks/repacks in VMEM
 
     def default_config(self) -> HeatConfig:
         return HeatConfig(nx=128)
@@ -110,11 +112,13 @@ class Heat1DStepper(Stepper):
         collect_evidence: bool = False,
         capture=None,
         interpret=None,
+        storage: str = "f32",
     ):
         from repro.kernels.heat_stencil import heat1d_sweep  # lazy: pallas off cold paths
 
+        packed = storage == "packed"
         res = heat1d_sweep(
-            u[None, :],
+            u.with_view((1, cfg.nx)) if packed else u[None, :],
             alpha=cfg.alpha,
             dtodx2=cfg.dtodx2,
             prec=prec,
@@ -125,12 +129,13 @@ class Heat1DStepper(Stepper):
             collect_evidence=collect_evidence,
             capture=capture,
             interpret=interpret,
+            storage=storage,
         )
         if capture is not None:
             out, ev, counts = res
-            return out[0], ev, counts
+            return (out.with_view((cfg.nx,)) if packed else out[0]), ev, counts
         out, ev = res
-        return out[0], ev
+        return (out.with_view((cfg.nx,)) if packed else out[0]), ev
 
 
 _STEPPER = Heat1DStepper()

@@ -91,9 +91,11 @@ class Heat2DStepper(Stepper):
     """Explicit 5-point stencil with the paper's two-multiplier split."""
 
     sites = ("heat2d.flux", "heat2d.update")
+    site_ops = ("mul", "mul")
     failure_mode = "underflow"
     story = "2D decay drives alpha*lap below E5M10's floor; 2D locality tiles"
     snapshots_default = 8
+    fused_packed = True  # the sweep kernel unpacks/repacks in VMEM
 
     def default_config(self) -> Heat2DConfig:
         return Heat2DConfig()
@@ -124,6 +126,7 @@ class Heat2DStepper(Stepper):
         collect_evidence: bool = False,
         capture=None,
         interpret=None,
+        storage: str = "f32",
     ):
         from repro.kernels.pde_steps import heat2d_sweep  # lazy: pallas off cold paths
 
@@ -138,4 +141,5 @@ class Heat2DStepper(Stepper):
             collect_evidence=collect_evidence,
             capture=capture,
             interpret=interpret,
+            storage=storage,
         )

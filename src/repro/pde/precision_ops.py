@@ -7,18 +7,21 @@ for solver code, delegating to the engine API (DESIGN.md §4):
 
   pmul(a, b, cfg)  == repro.precision.multiply  — policy's multiplier
   pstore(x, cfg)   == repro.precision.store     — low-bitwidth write-back
-  pdiv(a, b, cfg)  == repro.precision.divide    — R2F2 is a multiplier, so
-                      division stays in the substrate precision (f32) under
-                      every rr mode; format-rounded only for fixed units.
+  pdiv(a, b, cfg)  == repro.precision.divide    — the repro.alu flexible
+                      divider under rr modes (quotient-range evidence law);
+                      format-rounded for fixed units, f32 for the reference.
+  padd(a, b, cfg)  == repro.precision.add       — the repro.alu flexible
+                      adder (alignment-shift evidence law).
 
-``pmul`` additionally accepts ``tracker``/``site`` (named sites, e.g.
-``site="heat.flux"``) and then returns ``(out, tracker)`` — the deployment
-story for solvers, mirroring ``rr_einsum``'s uniform tracker contract.
+``pmul``/``pdiv``/``padd`` additionally accept ``tracker``/``site`` (named
+sites, e.g. ``site="heat.flux"``) and then return ``(out, tracker)`` — the
+deployment story for solvers, mirroring ``rr_einsum``'s uniform tracker
+contract.
 """
 
 from __future__ import annotations
 
-__all__ = ["pmul", "pstore", "pdiv"]
+__all__ = ["pmul", "pstore", "pdiv", "padd"]
 
 
 def pmul(a, b, cfg, *, tracker=None, site=None):
@@ -33,7 +36,13 @@ def pstore(x, cfg):
     return store(x, cfg)
 
 
-def pdiv(a, b, cfg):
+def pdiv(a, b, cfg, *, tracker=None, site=None):
     from repro.precision import divide
 
-    return divide(a, b, cfg)
+    return divide(a, b, cfg, tracker=tracker, site=site)
+
+
+def padd(a, b, cfg, *, tracker=None, site=None):
+    from repro.precision import add
+
+    return add(a, b, cfg, tracker=tracker, site=site)

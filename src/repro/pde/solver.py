@@ -46,11 +46,19 @@ import jax.numpy as jnp
 
 from repro.core.policy import PrecisionConfig
 from repro.dist.sharding import constrain
+from repro.pack import is_packed, pack_state, storage_quantize, unpack_state
 from repro.precision import fold_evidence, fused_eligible, get_engine, site_tracker_init
 from repro.pde.registry import get_stepper
 from repro.profile.capture import CaptureResult, CaptureSpec, pair_exp_hist, site_evidence
 
-__all__ = ["Stepper", "StepOps", "Simulation", "SimResult"]
+__all__ = ["Stepper", "StepOps", "Simulation", "SimResult", "STORAGE_MODES"]
+
+#: carried-state storage formats (DESIGN.md §13): "f32" carries raw f32
+#: between chunks (the historical behaviour, bit-compatible); "quantized"
+#: rounds chunk-boundary state through pack/unpack but carries f32;
+#: "packed" carries :class:`repro.pack.PackedArray` payloads — the same
+#: values as "quantized" bit-for-bit, at fmt.total_bits per element.
+STORAGE_MODES = ("f32", "quantized", "packed")
 
 
 class StepOps:
@@ -105,9 +113,42 @@ class StepOps:
             jnp.maximum(self.cap_evidence[j], site_evidence(a, b))
         )
 
-    def div(self, a, b):
-        """Quotient on the substrate divider (R2F2 is a multiplier)."""
-        return self._engine.divide(a, b, self.prec)
+    def add(self, a, b, site: str):
+        """Elementwise sum on the policy's flexible adder at a named site
+        (``repro.alu`` alignment-shift evidence law)."""
+        if self._cap_spec is not None:
+            self._capture(a, b, site)
+        out, self.tracker = self._engine.add(
+            a, b, self.prec, tracker=self.tracker, site=site
+        )
+        return out
+
+    def div(self, a, b, site: Optional[str] = None):
+        """Quotient on the policy's divider. With a named ``site`` this is
+        the tracked ``repro.alu`` flexible divider (quotient-range evidence
+        law); ``site=None`` keeps the historical untracked engine call."""
+        if site is None:
+            out, _ = self._engine.divide(a, b, self.prec)
+            return out
+        if self._cap_spec is not None:
+            self._capture(a, b, site)
+        out, self.tracker = self._engine.divide(
+            a, b, self.prec, tracker=self.tracker, site=site
+        )
+        return out
+
+    def rsqrt(self, x, site: Optional[str] = None):
+        """Reciprocal square root on the policy's datapath; the unary
+        evidence is the operand's exponent doubled up."""
+        if site is None:
+            out, _ = self._engine.rsqrt(x, self.prec)
+            return out
+        if self._cap_spec is not None:
+            self._capture(x, x, site)
+        out, self.tracker = self._engine.rsqrt(
+            x, self.prec, tracker=self.tracker, site=site
+        )
+        return out
 
     def store(self, x):
         """Round state to the policy's storage format."""
@@ -126,6 +167,11 @@ class Stepper:
 
     name: str = "?"
     sites: Tuple[str, ...] = ()
+    #: per-site op declarations aligned with ``sites`` ("mul" | "add" |
+    #: "div" | "rsqrt") — selects each site's exponent envelope when fused
+    #: evidence replays through the adjust unit (``fold_evidence``). Empty
+    #: means all-"mul" (the historical multiplier-only workloads).
+    site_ops: Tuple[str, ...] = ()
     #: how this scenario breaks a fixed 16-bit format (README table):
     #: "underflow" | "overflow" | "nonlinear-drift"
     failure_mode: str = "?"
@@ -143,8 +189,18 @@ class Stepper:
     #: ``(steps, len(sites), 2)`` the driver folds into the carried tracker.
     #: With a ``capture`` spec (range profiling, DESIGN.md §11) the return
     #: grows a trailing ``(len(sites), 2, n_bins)`` exponent-count array.
+    #: Steppers with ``fused_packed = True`` additionally accept
+    #: ``storage="packed"`` and then take/return the state as
+    #: :class:`repro.pack.PackedArray` leaves, unpacked/repacked inside the
+    #: kernel (one HBM round trip at ``fmt.total_bits`` per element).
     #: ``None`` means "reference path only".
     fused_step = None
+    #: True when ``fused_step`` supports in-kernel packed storage — the
+    #: Pallas sweep unpacks the payload in its prologue and repacks in its
+    #: epilogue, so packed chunks never materialise f32 state in HBM.
+    #: False (e.g. SWE's flux-kernel stepper) means the driver packs at the
+    #: XLA boundary instead: same bits, f32 traffic inside the chunk.
+    fused_packed: bool = False
 
     def fused_supported(self, cfg, prec: PrecisionConfig) -> bool:
         """Shape/config eligibility gate for the fused body (mode
@@ -246,6 +302,28 @@ class Simulation:
             )
         return execution
 
+    # -- carried-state storage (DESIGN.md §13) -------------------------------
+
+    @staticmethod
+    def _resolve_storage(storage: str) -> str:
+        if storage not in STORAGE_MODES:
+            raise ValueError(
+                f"unknown storage mode {storage!r}; expected one of {STORAGE_MODES}"
+            )
+        return storage
+
+    def _storage_in(self, state0, storage: str):
+        """Bring an initial state onto the run's storage format. Packed runs
+        accept either f32 leaves (packed here — the run's first and only
+        pack of that boundary) or an already-packed tree (a resumed carry
+        from a previous packed run / service chunk, used verbatim)."""
+        fmt = self.prec.fmt
+        if storage == "packed":
+            return state0 if is_packed(state0) else pack_state(state0, fmt)
+        if is_packed(state0):
+            state0 = unpack_state(state0)
+        return storage_quantize(state0, fmt) if storage == "quantized" else state0
+
     # -- profiling / policy plumbing ----------------------------------------
 
     def _resolve_capture(self, capture):
@@ -285,6 +363,7 @@ class Simulation:
         execution: str = "reference",
         capture=None,
         policy=None,
+        storage: str = "f32",
     ) -> SimResult:
         """Advance ``steps`` updates, snapshotting observables periodically.
 
@@ -313,17 +392,30 @@ class Simulation:
         tracked modes start their tracker at the artifact's per-site tuned
         splits and clamp re-picks to its floor/ceiling hints. Combine with
         ``prec.pinned`` for the static profiled-deployment emulation.
+
+        ``storage`` selects the carried-state format between chunk
+        boundaries (snapshot intervals — :data:`STORAGE_MODES`, DESIGN.md
+        §13). ``"quantized"`` rounds boundary state through the packed
+        format but carries f32; ``"packed"`` carries
+        :class:`repro.pack.PackedArray` payloads (``fmt.total_bits`` per
+        element — the result's ``state`` and any resumed carry are packed
+        trees) and is bit-identical to ``"quantized"`` by construction:
+        both apply exactly one pack per boundary to the same f32 values.
         """
         stepper, cfg, prec = self.stepper, self.cfg, self.prec
+        storage = self._resolve_storage(storage)
         if policy is not None:
             prec, tracker = self._apply_policy(prec, tracker, policy)
         state0 = stepper.init_state(cfg) if state0 is None else state0
+        state0 = self._storage_in(state0, storage)
         if tracker is None:
             tracker = self.init_tracker()
         spec = self._resolve_capture(capture)
         every = snapshot_every or max(1, steps // stepper.snapshots_default)
         if self._resolve_execution(execution) == "fused":
-            return self._run_fused(steps, every, state0, tracker, prec=prec, capture=spec)
+            return self._run_fused(
+                steps, every, state0, tracker, prec=prec, capture=spec, storage=storage
+            )
 
         def body(carry, _):
             state, tr = carry
@@ -331,33 +423,61 @@ class Simulation:
             state = stepper.step(state, cfg, ops)
             return (state, ops.tracker), None
 
-        def outer(carry, _):
-            carry, _ = jax.lax.scan(body, carry, None, length=every)
-            return carry, stepper.observables(carry[0], cfg)
-
         n_out = steps // every
         rem = steps - n_out * every
         if spec is not None:
             return self._run_reference_captured(
-                steps, every, n_out, rem, state0, tracker, prec, spec
+                steps, every, n_out, rem, state0, tracker, prec, spec, storage
             )
+
+        if storage == "packed":
+            # the outer carry stays packed; each interval unpacks once,
+            # advances in f32, and packs once at the boundary
+            def outer(carry, _):
+                (state, tr), _ = jax.lax.scan(
+                    body, (unpack_state(carry[0]), carry[1]), None, length=every
+                )
+                packed = pack_state(state, prec.fmt)
+                return (packed, tr), stepper.observables(unpack_state(packed), cfg)
+
+            carry = (state0, tracker)
+            carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
+            if rem:
+                (state, tr), _ = jax.lax.scan(
+                    body, (unpack_state(carry[0]), carry[1]), None, length=rem
+                )
+                carry = (pack_state(state, prec.fmt), tr)
+            state, tracker = carry
+            return SimResult(state, snaps, tracker)
+
+        def outer(carry, _):
+            carry, _ = jax.lax.scan(body, carry, None, length=every)
+            state = carry[0]
+            if storage == "quantized":
+                state = storage_quantize(state, prec.fmt)
+            return (state, carry[1]), stepper.observables(state, cfg)
+
         carry = (state0, tracker)
         carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
         if rem:
             carry, _ = jax.lax.scan(body, carry, None, length=rem)
+            if storage == "quantized":
+                carry = (storage_quantize(carry[0], prec.fmt), carry[1])
         state, tracker = carry
         return SimResult(state, snaps, tracker)
 
     def _run_reference_captured(
-        self, steps, every, n_out, rem, state0, tracker, prec, spec
+        self, steps, every, n_out, rem, state0, tracker, prec, spec, storage="f32"
     ) -> SimResult:
         """The reference loop with range capture: the exponent-count
         accumulator rides the scan carry next to the tracker, per-step site
         evidence is a scan output, and each snapshot interval emits its
-        count delta (the profile's time axis)."""
+        count delta (the profile's time axis). Boundary storage rounding is
+        applied exactly as in the uncaptured loop (one pack per boundary)."""
         stepper, cfg = self.stepper, self.cfg
         n_sites = len(stepper.sites)
         counts0 = jnp.zeros((n_sites, 2, spec.n_bins), jnp.int32)
+        packed_mode = storage == "packed"
 
         def body(carry, _):
             state, tr, counts = carry
@@ -365,22 +485,50 @@ class Simulation:
             state = stepper.step(state, cfg, ops)
             return (state, ops.tracker, ops.cap_counts), ops.cap_evidence
 
+        def _boundary(state):
+            if storage == "quantized":
+                return storage_quantize(state, prec.fmt)
+            return pack_state(state, prec.fmt) if packed_mode else state
+
         def outer(carry, _):
-            before = carry[2]
-            carry, evs = jax.lax.scan(body, carry, None, length=every)
-            return carry, (stepper.observables(carry[0], cfg), evs, carry[2] - before)
+            state, tr, counts = carry
+            before = counts
+            if packed_mode:
+                state = unpack_state(state)
+            (state, tr, counts), evs = jax.lax.scan(
+                body, (state, tr, counts), None, length=every
+            )
+            state = _boundary(state)
+            obs = stepper.observables(
+                unpack_state(state) if packed_mode else state, cfg
+            )
+            return (state, tr, counts), (obs, evs, counts - before)
 
         carry = (state0, tracker, counts0)
         carry, (snaps, evs, exp_time) = jax.lax.scan(outer, carry, None, length=n_out)
         evidence = evs.reshape((n_out * every, n_sites, 2))
         if rem:
-            carry, evs_rem = jax.lax.scan(body, carry, None, length=rem)
+            state, tr, counts = carry
+            if packed_mode:
+                state = unpack_state(state)
+            (state, tr, counts), evs_rem = jax.lax.scan(
+                body, (state, tr, counts), None, length=rem
+            )
+            carry = (_boundary(state), tr, counts)
             evidence = jnp.concatenate([evidence, evs_rem], axis=0)
         state, tracker, exp_total = carry
         return SimResult(state, snaps, tracker, CaptureResult(evidence, exp_time, exp_total))
 
     def _run_fused(
-        self, steps: int, every: int, state0, tracker, *, prec=None, capture=None
+        self,
+        steps: int,
+        every: int,
+        state0,
+        tracker,
+        *,
+        prec=None,
+        capture=None,
+        storage: str = "f32",
     ) -> SimResult:
         """The fused plane's chunked loop: one multi-substep kernel call per
         snapshot interval, tracker evidence folded in between chunks.
@@ -392,12 +540,24 @@ class Simulation:
         (:func:`repro.precision.fold_evidence`). With ``capture``, the
         kernels' widened evidence stream (per-site exponent counts) comes
         back per chunk and assembles into the run's profile.
+
+        Packed storage has two shapes here. Steppers with
+        ``fused_packed = True`` take the PackedArray carry straight into the
+        kernel (``fused_step(..., storage="packed")``): unpack rides the
+        sweep prologue and repack its epilogue, so the chunk's HBM traffic
+        is the payload — ``fmt.total_bits`` per element instead of 32.
+        Otherwise the driver packs at the XLA boundary around the f32
+        ``fused_step``: same bits (one pack per boundary either way), no
+        bandwidth win inside the chunk.
         """
         stepper, cfg = self.stepper, self.cfg
         prec = self.prec if prec is None else prec
+        in_kernel = storage == "packed" and getattr(stepper, "fused_packed", False)
 
         def chunk(carry, n):
             state, tr = carry
+            if storage == "packed" and not in_kernel:
+                state = unpack_state(state)
             res = stepper.fused_step(
                 state,
                 cfg,
@@ -408,15 +568,22 @@ class Simulation:
                 collect_evidence=capture is not None
                 or (tr is not None and not prec.pinned),
                 capture=capture,
+                **({"storage": "packed"} if in_kernel else {}),
             )
             state, ev = res[:2]
+            if storage == "quantized":
+                state = storage_quantize(state, prec.fmt)
+            elif storage == "packed" and not in_kernel:
+                state = pack_state(state, prec.fmt)
             if tr is not None:
-                tr = fold_evidence(tr, ev, prec)
+                tr = fold_evidence(tr, ev, prec, ops=stepper.site_ops or None)
             return (state, tr), ev, (res[2] if capture is not None else None)
 
         def outer(carry, _):
             carry, ev, counts = chunk(carry, every)
-            obs = stepper.observables(carry[0], cfg)
+            obs = stepper.observables(
+                unpack_state(carry[0]) if storage == "packed" else carry[0], cfg
+            )
             return carry, (obs if capture is None else (obs, ev, counts))
 
         n_out = steps // every
@@ -451,6 +618,7 @@ class Simulation:
         capture=None,
         policy=None,
         tracker0_batch=None,
+        storage: str = "f32",
     ) -> SimResult:
         """Vmapped ensemble over a batch of initial conditions.
 
@@ -472,6 +640,12 @@ class Simulation:
         joiners, restacks ``(state, tracker)`` and calls back in — each
         member's carried split ``k`` and §5.3 adjustment counters survive
         the repack because they are handed straight back here.
+
+        ``storage`` behaves as in :meth:`run`, per member; a packed
+        ensemble's state batch (initial and returned) is a PackedArray tree
+        whose children lead with the member dim — the repacking contract
+        above carries packed members between service chunks without ever
+        widening them to f32 in HBM.
         """
         if sharded:
             state0_batch = _constrain_ensemble(state0_batch)
@@ -480,6 +654,7 @@ class Simulation:
         # resolve once outside the vmap so an ineligible explicit "fused"
         # raises eagerly with the real reason rather than from inside a trace
         execution = self._resolve_execution(execution)
+        storage = self._resolve_storage(storage)
 
         def one(s0, tr0=None):
             return self.run(
@@ -490,6 +665,7 @@ class Simulation:
                 execution=execution,
                 capture=capture,
                 policy=policy,
+                storage=storage,
             )
 
         if tracker0_batch is not None:

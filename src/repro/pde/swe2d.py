@@ -6,10 +6,12 @@ State U = (h, hu, hv) on a square ocean basin. Fluxes
     F(U) = (hu,  hu^2/h + g h^2/2,  huv/h)
     G(U) = (hv,  huv/h,             hv^2/h + g h^2/2)
 
-As in the paper's experiment, ONLY the multiplications of the momentum-flux
-equation  ``Ux_mx = q1_mx*q1_mx/q3_mx + 0.5*g*q3_mx*q3_mx``  are routed
-through the precision policy (they substituted exactly one of the 24
-sub-equations); everything else stays f32. With a realistic resting depth
+As in the paper's experiment, ONLY the momentum-flux equation
+``Ux_mx = q1_mx*q1_mx/q3_mx + 0.5*g*q3_mx*q3_mx`` is routed through the
+precision policy (they substituted exactly one of the 24 sub-equations) —
+its three multiplications on the R2F2 multiplier and, since the
+``repro.alu`` extension, its division on the tracked flexible divider;
+everything else stays f32. With a realistic resting depth
 (h0 = 500 m, the ``SWEConfig.depth`` default) the term ``h*h = 2.5e5``
 overflows E5M10's 65504 ceiling, so standard half corrupts the simulation
 while R2F2 widens the exponent at runtime (k -> FX) and matches the
@@ -75,11 +77,12 @@ def initial_state(cfg: SWEConfig):
 
 def _momentum_flux(q1, q3, ops: StepOps):
     """The paper's substituted equation: q1*q1/q3 + 0.5*g*q3*q3, with its
-    multiplications on the policy's multiplier. The division stays on the
-    f32 divider like every other division in this solver (R2F2 is a
-    multiplier; the paper substitutes only the multiplications)."""
+    multiplications on the policy's multiplier AND its division on the
+    policy's flexible divider (``repro.alu`` — the tracked ``swe.div``
+    site, split picked under the quotient-range envelope). Every other
+    division in this solver stays on the f32 divider."""
     t1 = ops.mul(q1, q1, "swe.q1q1")
-    t2 = t1 / q3
+    t2 = ops.div(t1, q3, "swe.div")
     t3 = ops.mul(q3, q3, "swe.q3q3")
     t4 = ops.mul(jnp.float32(0.5 * G), t3, "swe.gq3")
     return t2 + t4
@@ -152,12 +155,14 @@ class SWE2DStepper(Stepper):
 
     Faithful to the paper's experiment (§5.3): of the ~24 sub-equations, ONLY
     the x-midpoint momentum-flux equation ``Ux_mx = q1_mx^2/q3_mx +
-    0.5*g*q3_mx^2`` has its multiplications routed through the precision
-    policy (inside ``_flux_F(Ux, ops)``); every other sub-equation stays in
-    the baseline precision.
+    0.5*g*q3_mx^2`` is routed through the precision policy (inside
+    ``_flux_F(Ux, ops)``) — three multiplier sites plus the ``swe.div``
+    flexible-divider site; every other sub-equation stays in the baseline
+    precision.
     """
 
-    sites = ("swe.q1q1", "swe.q3q3", "swe.gq3")
+    sites = ("swe.q1q1", "swe.q3q3", "swe.gq3", "swe.div")
+    site_ops = ("mul", "mul", "mul", "div")
     failure_mode = "overflow"
     story = "h*h = 2.5e5 at a realistic basin depth overflows E5M10's 65504"
     snapshots_default = 4
@@ -197,6 +202,7 @@ class SWE2DStepper(Stepper):
                 q3,
                 prec=prec,
                 sites=self.sites,
+                site_ops=self.site_ops,
                 k_floor=k_floor,
                 collect_evidence=collect_evidence,
                 capture=capture,

@@ -65,7 +65,9 @@ __all__ = [
     # functional API
     "prepare_operand",
     "multiply",
+    "add",
     "divide",
+    "rsqrt",
     "store",
     "contract",
     "dot",
@@ -93,9 +95,32 @@ def multiply(a, b, cfg, *, tracker=None, site=None):
     return (out, tracker_out) if tracker is not None else out
 
 
-def divide(a, b, cfg):
-    """Elementwise quotient (most policies: the substrate's f32 divider)."""
-    return get_engine(cfg).divide(a, b, cfg)
+def add(a, b, cfg, *, tracker=None, site=None):
+    """Elementwise sum on the policy's adder (repro.alu flexible add).
+
+    Returns ``out`` — or ``(out, tracker)`` whenever a tracker is passed.
+    """
+    out, tracker_out = get_engine(cfg).add(a, b, cfg, tracker=tracker, site=site)
+    return (out, tracker_out) if tracker is not None else out
+
+
+def divide(a, b, cfg, *, tracker=None, site=None):
+    """Elementwise quotient on the policy's divider (repro.alu flexible
+    divide for rr modes; historically the substrate's f32 divider).
+
+    Returns ``out`` — or ``(out, tracker)`` whenever a tracker is passed.
+    """
+    out, tracker_out = get_engine(cfg).divide(a, b, cfg, tracker=tracker, site=site)
+    return (out, tracker_out) if tracker is not None else out
+
+
+def rsqrt(x, cfg, *, tracker=None, site=None):
+    """Elementwise reciprocal square root on the policy's datapath.
+
+    Returns ``out`` — or ``(out, tracker)`` whenever a tracker is passed.
+    """
+    out, tracker_out = get_engine(cfg).rsqrt(x, cfg, tracker=tracker, site=site)
+    return (out, tracker_out) if tracker is not None else out
 
 
 def store(x, cfg):

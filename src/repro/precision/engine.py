@@ -4,15 +4,19 @@ An engine is the *whole* answer to "what does this policy do to arithmetic":
 
     prepare_operand(x, cfg, *, k=None) -> (x_q, k)   one operand, policy-rounded
     multiply(a, b, cfg, *, tracker, site)            elementwise product
-    divide(a, b, cfg)                                elementwise quotient
+    add(a, b, cfg, *, tracker, site)                 elementwise sum (repro.alu)
+    divide(a, b, cfg, *, tracker, site)              elementwise quotient
+    rsqrt(x, cfg, *, tracker, site)                  elementwise 1/sqrt
     store(x, cfg)                                    state write-back rounding
     contract(spec, a, b, cfg, *, tracker, site, shared_k)
                                                      einsum with policy operands
 
-``contract`` and ``multiply`` ALWAYS return ``(out, tracker)`` — tracker is
-passed through unchanged by engines that do not track (the old
+``contract`` and every elementwise op ALWAYS return ``(out, tracker)`` —
+tracker is passed through unchanged by engines that do not track (the old
 ``rr_einsum`` sometimes returned a bare array, sometimes a tuple; the engine
-layer is where that contract is now uniform). ``tracker`` may be a raw
+layer is where that contract is now uniform). Tracked engines fold each
+op's evidence under its own envelope law (``op="add"``/``"div"``/
+``"rsqrt"`` in :func:`repro.core.policy.tracker_observe`). ``tracker`` may be a raw
 :class:`repro.core.policy.RangeTracker` with an integer ``site`` (legacy) or
 a :class:`repro.precision.sites.SiteTracker` with a *named* site
 (``site="attn.qk"``) — resolution is handled once, in
@@ -125,11 +129,26 @@ class PrecisionEngine:
         bq, _ = self.prepare_operand(b, cfg)
         return aq * bq, tracker
 
-    def divide(self, a, b, cfg):
-        """Division; most multipliers (incl. R2F2) leave it to the substrate
-        divider, so the default is plain f32."""
-        del cfg
-        return jnp.asarray(a, jnp.float32) / jnp.asarray(b, jnp.float32)
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        """Elementwise sum on the policy's adder. Returns ``(out, tracker)``."""
+        del site
+        aq, _ = self.prepare_operand(jnp.asarray(a, jnp.float32), cfg)
+        bq, _ = self.prepare_operand(jnp.asarray(b, jnp.float32), cfg)
+        return aq + bq, tracker
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        """Elementwise quotient. Returns ``(out, tracker)``. The base engine
+        leaves division to the f32 substrate divider."""
+        del site
+        aq, _ = self.prepare_operand(jnp.asarray(a, jnp.float32), cfg)
+        bq, _ = self.prepare_operand(jnp.asarray(b, jnp.float32), cfg)
+        return aq / bq, tracker
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        """Elementwise reciprocal square root. Returns ``(out, tracker)``."""
+        del site
+        xq, _ = self.prepare_operand(jnp.asarray(x, jnp.float32), cfg)
+        return jax.lax.rsqrt(xq), tracker
 
     def store(self, x, cfg):
         """State written back to the policy's storage format."""

@@ -31,11 +31,13 @@ from __future__ import annotations
 
 import re
 
+import jax
 import jax.numpy as jnp
 
+from repro.alu import flex_op
 from repro.core.flexformat import quantize_em, quantize_em_with_flags
 from repro.core.policy import tracker_k, tracker_update
-from repro.core.r2f2 import _tile_max_exp, r2f2_multiply, select_k, select_k_operand
+from repro.core.r2f2 import _tile_max_exp, r2f2_multiply, select_k, select_k_op, select_k_operand
 
 from .engine import PrecisionEngine, bf16_pair, ste, tile_shape_for
 from .registry import register_engine
@@ -137,10 +139,25 @@ class BF16Engine(PrecisionEngine):
         out = (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)).astype(jnp.float32)
         return out, tracker
 
-    def divide(self, a, b, cfg):
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        del site
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
-        return (a.astype(jnp.bfloat16) / b.astype(jnp.bfloat16)).astype(jnp.float32)
+        out = (a.astype(jnp.bfloat16) + b.astype(jnp.bfloat16)).astype(jnp.float32)
+        return out, tracker
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out = (a.astype(jnp.bfloat16) / b.astype(jnp.bfloat16)).astype(jnp.float32)
+        return out, tracker
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        del site
+        x = jnp.asarray(x, jnp.float32)
+        out = jax.lax.rsqrt(x.astype(jnp.bfloat16)).astype(jnp.float32)
+        return out, tracker
 
 
 @register_engine("fixed")
@@ -172,11 +189,25 @@ class FixedEngine(PrecisionEngine):
         p = quantize_em(a, e, m) * quantize_em(b, e, m)
         return quantize_em(p, e, m), tracker
 
-    def divide(self, a, b, cfg):
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        del site
         e, m = cfg.fixed_em
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
-        return quantize_em(quantize_em(a, e, m) / quantize_em(b, e, m), e, m)
+        return quantize_em(quantize_em(a, e, m) + quantize_em(b, e, m), e, m), tracker
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        e, m = cfg.fixed_em
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        return quantize_em(quantize_em(a, e, m) / quantize_em(b, e, m), e, m), tracker
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        del site
+        e, m = cfg.fixed_em
+        x = jnp.asarray(x, jnp.float32)
+        return quantize_em(jax.lax.rsqrt(quantize_em(x, e, m)), e, m), tracker
 
     def store(self, x, cfg):
         e, m = cfg.fixed_em
@@ -189,6 +220,14 @@ def _shared_k(a, b, cfg):
     ae, _ = _tile_max_exp(a, None)
     be, _ = _tile_max_exp(b, None)
     return select_k(ae, be, cfg.fmt)
+
+
+def _shared_k_op(a, b, cfg, op):
+    """Per-tensor shared split for one flexible ALU op — :func:`_shared_k`
+    under the op's own exponent envelope (repro.alu)."""
+    ae, _ = _tile_max_exp(a, None)
+    be, _ = _tile_max_exp(b, None)
+    return select_k_op(ae, be, cfg.fmt, op)
 
 
 @register_engine("rr_tile")
@@ -237,6 +276,21 @@ class RRTileEngine(PrecisionEngine):
         a = jnp.asarray(a, jnp.float32)
         b = jnp.asarray(b, jnp.float32)
         out, _ = r2f2_multiply(a, b, cfg.fmt, tile_shape=None, tail_approx=cfg.tail_approx)
+        return out, tracker
+
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        out, _ = flex_op(a, b, cfg.fmt, "add", tile_shape=None)
+        return out, tracker
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        del site
+        out, _ = flex_op(a, b, cfg.fmt, "div", tile_shape=None)
+        return out, tracker
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        del site
+        out, _ = flex_op(x, None, cfg.fmt, "rsqrt", tile_shape=None)
         return out, tracker
 
     def store(self, x, cfg):
@@ -299,6 +353,35 @@ class RRTrackedEngine(RRTileEngine):
         out, _ = r2f2_multiply(a, b, cfg.fmt, k=k, tile_shape=None, tail_approx=cfg.tail_approx)
         return out, rewrap(tracker, state)
 
+    def _tracked_alu(self, op, a, b, cfg, tracker, site):
+        """Shared tracked driver for the repro.alu ops: carried split grown
+        to the op's instantaneous envelope need, evidence folded under the
+        op's own law (``tracker_observe(..., op=...)``)."""
+        a = jnp.asarray(a, jnp.float32)
+        b = a if b is None else jnp.asarray(b, jnp.float32)
+        state, idx = resolve_site(tracker, site)
+        if state is None or idx is None:
+            # untracked fallback: stateless per-tensor selection (rr_tile)
+            out, _ = flex_op(a, b, cfg.fmt, op, tile_shape=None)
+            return out, tracker
+        ev_op = "add" if op == "sub" else op
+        if cfg.pinned:
+            k = tracker_k(state, idx)
+        else:
+            k = jnp.maximum(tracker_k(state, idx), _shared_k_op(a, b, cfg, ev_op))
+            state = tracker_update(state, idx, a, b, cfg, ev_op)
+        out, _ = flex_op(a, b, cfg.fmt, op, k=k)
+        return out, rewrap(tracker, state)
+
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        return self._tracked_alu("add", a, b, cfg, tracker, site)
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        return self._tracked_alu("div", a, b, cfg, tracker, site)
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        return self._tracked_alu("rsqrt", x, None, cfg, tracker, site)
+
 
 @register_engine("deploy")
 class DeployEngine(BF16Engine):
@@ -308,12 +391,12 @@ class DeployEngine(BF16Engine):
 
     tracks = True
 
-    def _track(self, tracker, site, a, b, cfg):
+    def _track(self, tracker, site, a, b, cfg, op="mul"):
         if cfg.pinned:  # static profiled k: bookkeeping stays at the policy's split
             return tracker
         state, idx = resolve_site(tracker, site)
         if state is not None and idx is not None:
-            tracker = rewrap(tracker, tracker_update(state, idx, a, b, cfg))
+            tracker = rewrap(tracker, tracker_update(state, idx, a, b, cfg, op))
         return tracker
 
     def contract(self, spec, a, b, cfg, *, tracker=None, site=None, shared_k=False):
@@ -327,3 +410,20 @@ class DeployEngine(BF16Engine):
         b = jnp.asarray(b, jnp.float32)
         out, _ = super().multiply(a, b, cfg)
         return out, self._track(tracker, site, a, b, cfg)
+
+    def add(self, a, b, cfg, *, tracker=None, site=None):
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out, _ = super().add(a, b, cfg)
+        return out, self._track(tracker, site, a, b, cfg, "add")
+
+    def divide(self, a, b, cfg, *, tracker=None, site=None):
+        a = jnp.asarray(a, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        out, _ = super().divide(a, b, cfg)
+        return out, self._track(tracker, site, a, b, cfg, "div")
+
+    def rsqrt(self, x, cfg, *, tracker=None, site=None):
+        x = jnp.asarray(x, jnp.float32)
+        out, _ = super().rsqrt(x, cfg)
+        return out, self._track(tracker, site, x, x, cfg, "rsqrt")

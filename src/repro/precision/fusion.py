@@ -67,16 +67,21 @@ def fused_eligible(prec: PrecisionConfig, stepper, cfg=None) -> bool:
     return bool(supported(cfg, prec)) if callable(supported) else True
 
 
-def fold_evidence(tracker, evidence, cfg: PrecisionConfig):
+def fold_evidence(tracker, evidence, cfg: PrecisionConfig, ops=None):
     """Fold a fused chunk's evidence into the carried tracker.
 
     ``evidence`` is the kernels' second output after cross-block max
     reduction: ``(substeps, n_sites, 2)`` f32, where ``[..., 0]``/``[..., 1]``
     are the per-site max unbiased exponents of the two operands of that
-    site's multiplication at that substep. Each substep is replayed in order
+    site's operation at that substep. Each substep is replayed in order
     through :func:`repro.core.policy.tracker_observe` — identical adjust-unit
     math (EMA, grow-on-demand, shrink-on-redundancy, §5.3 counters) to the
     stepwise loop, just batched per chunk.
+
+    ``ops`` is the per-site operation tuple (a stepper's ``site_ops`` —
+    ``"mul"``/``"add"``/``"div"``/``"rsqrt"``), selecting each site's
+    exponent envelope (:func:`repro.core.r2f2.op_bounds`) when the evidence
+    replays; ``None`` keeps the historical all-multiplier law.
 
     ``tracker`` may be a :class:`SiteTracker` (site order must match the
     evidence's site axis — the stepper's ``sites`` tuple) or a raw
@@ -92,10 +97,15 @@ def fold_evidence(tracker, evidence, cfg: PrecisionConfig):
         raise ValueError(
             f"evidence covers {n_sites} sites but tracker has {len(state.k)} rows"
         )
+    if ops is not None and len(ops) != n_sites:
+        raise ValueError(
+            f"site_ops covers {len(ops)} sites but evidence has {n_sites}"
+        )
 
     def substep(st, ev_s):  # ev_s: (n_sites, 2)
         for j in range(n_sites):
-            st = tracker_observe(st, j, ev_s[j, 0], ev_s[j, 1], cfg)
+            op = "mul" if ops is None else ops[j]
+            st = tracker_observe(st, j, ev_s[j, 0], ev_s[j, 1], cfg, op)
         return st, None
 
     state, _ = jax.lax.scan(substep, state, evidence)

@@ -45,9 +45,18 @@ class RangeProfile:
         steps: int,
         execution: str,
         result: CaptureResult,
+        site_ops: Optional[Tuple[str, ...]] = None,
     ):
         self.stepper = stepper
         self.sites = tuple(sites)
+        #: per-site op declarations ("mul"/"add"/"div"/"rsqrt") — selects the
+        #: exponent envelope k_need/synthesis replays under; None = all-mul
+        self.site_ops = None if site_ops is None else tuple(site_ops)
+        if self.site_ops is not None and len(self.site_ops) != len(self.sites):
+            raise ValueError(
+                f"site_ops covers {len(self.site_ops)} entries for "
+                f"{len(self.sites)} sites"
+            )
         self.spec = spec
         self.prec = prec
         self.steps = int(steps)
@@ -92,10 +101,26 @@ class RangeReport:
         self.profile = profile
         p = profile
         fx = p.prec.fmt.fx
-        # per-issue instantaneous need, the adjust unit's own statistic
-        self.k_need = np.asarray(
-            evidence_k_need(p.evidence[..., 0], p.evidence[..., 1], p.prec), np.int32
-        )  # (steps, n_sites); saturates at FX like the hardware
+        # per-issue instantaneous need, the adjust unit's own statistic —
+        # each site judged under its own op envelope when ops are declared
+        if p.site_ops is None:
+            self.k_need = np.asarray(
+                evidence_k_need(p.evidence[..., 0], p.evidence[..., 1], p.prec),
+                np.int32,
+            )  # (steps, n_sites); saturates at FX like the hardware
+        else:
+            self.k_need = np.stack(
+                [
+                    np.asarray(
+                        evidence_k_need(
+                            p.evidence[:, j, 0], p.evidence[:, j, 1], p.prec, op
+                        ),
+                        np.int32,
+                    )
+                    for j, op in enumerate(p.site_ops)
+                ],
+                axis=1,
+            )
         self.sites: Dict[str, Dict[str, Any]] = {}
         for j, name in enumerate(p.sites):
             per_op = [_occupied_span(p.exp_total[j, s], p.spec) for s in (0, 1)]

@@ -53,9 +53,21 @@ def synthesize_policy(profile: RangeProfile, prec: Optional[PrecisionConfig] = N
     n_sites = len(profile.sites)
     ev = jnp.asarray(profile.evidence, jnp.float32)
 
-    state = fold_evidence(tracker_init(n_sites, base.fmt), ev, base)
+    ops = profile.site_ops  # None = all-mul; else per-site op envelopes
+    state = fold_evidence(tracker_init(n_sites, base.fmt), ev, base, ops=ops)
     k = np.asarray(state.k, np.int64)
-    k_need = np.asarray(evidence_k_need(ev[..., 0], ev[..., 1], base), np.int64)
+    if ops is None:
+        k_need = np.asarray(evidence_k_need(ev[..., 0], ev[..., 1], base), np.int64)
+    else:
+        k_need = np.stack(
+            [
+                np.asarray(
+                    evidence_k_need(ev[:, j, 0], ev[:, j, 1], base, op), np.int64
+                )
+                for j, op in enumerate(ops)
+            ],
+            axis=1,
+        )
     k_hi = np.maximum(k_need.max(axis=0), k)  # converged k never exceeds max
     k_lo = np.minimum(k_need.min(axis=0), k)  # need, but keep the invariant
     sites = {

@@ -51,6 +51,13 @@ def capture_profile(
         capture=spec,
     )
     profile = RangeProfile(
-        sim.stepper.name, sim.stepper.sites, spec, prec, steps, execution, res.profile
+        sim.stepper.name,
+        sim.stepper.sites,
+        spec,
+        prec,
+        steps,
+        execution,
+        res.profile,
+        site_ops=getattr(sim.stepper, "site_ops", None) or None,
     )
     return profile, res

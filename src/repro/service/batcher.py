@@ -98,6 +98,7 @@ class ChunkCompiler:
                     tracker0_batch=tracker_b,
                     execution=key.execution,
                     sharded=sharded,
+                    storage=key.storage,
                 )
                 return res.state, res.snapshots, res.tracker
 

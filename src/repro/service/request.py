@@ -62,7 +62,10 @@ class SimRequest:
     ``policy`` is a PrecisionPolicy artifact (object or JSON path) — it must
     be validated-accepted and profiled for this stepper. ``state0`` replaces
     the stepper's initial condition (a pytree matching ``init_state``'s
-    structure). ``tag`` is a free-form client label echoed in reports.
+    structure). ``storage`` selects the carried-state format between chunks
+    (:data:`repro.pde.solver.STORAGE_MODES` — ``"packed"`` members carry
+    R2F2 payloads through the whole bucket lifecycle, including eviction).
+    ``tag`` is a free-form client label echoed in reports.
     """
 
     stepper: str
@@ -74,6 +77,7 @@ class SimRequest:
     snapshot_every: Optional[int] = None
     execution: str = "auto"
     state0: Any = None
+    storage: str = "f32"
     tag: str = ""
 
 
@@ -91,16 +95,21 @@ class RequestResult(NamedTuple):
 
 
 class BucketKey(NamedTuple):
-    """Scheduler compatibility key — see module docstring."""
+    """Scheduler compatibility key — see module docstring. ``storage`` is
+    part of the key: members carrying packed state step through a different
+    compiled program (PackedArray carry) than f32 members and must never
+    share a stack with them."""
 
     stepper: str
     cfg: Any
     prec: PrecisionConfig
     execution: str
     shape_sig: Any
+    storage: str = "f32"
 
     def short(self) -> str:
-        return f"{self.stepper}/{self.prec.mode}/{self.execution}"
+        s = f"{self.stepper}/{self.prec.mode}/{self.execution}"
+        return s if self.storage == "f32" else f"{s}/{self.storage}"
 
 
 def _shape_sig(state) -> Tuple:
@@ -227,6 +236,7 @@ def resolve_request(rid: int, req: SimRequest) -> RequestRecord:
 
     sim = Simulation(stepper, cfg, prec)
     execution = sim._resolve_execution(req.execution)  # "auto" -> concrete plane
+    storage = sim._resolve_storage(req.storage)  # reject unknown formats at admit
 
     state0 = stepper.init_state(cfg) if req.state0 is None else req.state0
     state0 = jax.tree_util.tree_map(jnp.asarray, state0)
@@ -235,7 +245,7 @@ def resolve_request(rid: int, req: SimRequest) -> RequestRecord:
     )
     every = req.snapshot_every or max(1, req.steps // stepper.snapshots_default)
 
-    key = BucketKey(stepper.name, cfg, prec, execution, _shape_sig(state0))
+    key = BucketKey(stepper.name, cfg, prec, execution, _shape_sig(state0), storage)
     return RequestRecord(rid, req, sim, key, state0, tracker, req.steps, every)
 
 

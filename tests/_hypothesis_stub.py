@@ -1,0 +1,172 @@
+"""Dependency-free stand-in for the slice of the hypothesis API our
+property suites use (``given``, ``settings``, ``strategies.floats`` /
+``strategies.integers``).
+
+The baked runtime image does not ship hypothesis, and the repo may not
+install anything; rather than skip the bit-level property modules,
+``tests/conftest.py`` installs this module as ``sys.modules["hypothesis"]``
+when the real package is absent, so the same test source runs under either.
+Semantics under the stub:
+
+* **deterministic** — the example stream is seeded from the test's qualname
+  (crc32, not ``hash``), so a failure reproduces without shrinking;
+* **edge-first** — every strategy contributes a corner list (signed zeros,
+  bound endpoints, subnormal floor, max-normal neighborhood, ...) and the
+  first examples round-robin through those before random draws start; the
+  corners are the cases these suites exist for;
+* **bounded** — the example budget is ``settings(max_examples=...)`` capped
+  by ``REPRO_HYPOTHESIS_EXAMPLES`` (default 50), which is how CI's fast
+  tier keeps the property modules inside its time budget. Under the real
+  package the same env var is applied via a profile in conftest.
+
+No shrinking, no ``assume``, no stateful testing — the suites here don't
+use them.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import os
+import random
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+#: hard cap on per-test examples, CI's knob for the fast tier
+ENV_BUDGET = "REPRO_HYPOTHESIS_EXAMPLES"
+DEFAULT_MAX_EXAMPLES = 50
+
+
+def _budget(requested: int) -> int:
+    cap = int(os.environ.get(ENV_BUDGET, DEFAULT_MAX_EXAMPLES))
+    return max(1, min(requested, cap))
+
+
+class _Strategy:
+    """A corner list + a random draw function."""
+
+    def __init__(self, edges, draw):
+        self.edges = list(edges)
+        self.draw = draw
+
+
+def _floats(
+    min_value=None,
+    max_value=None,
+    allow_nan=False,
+    allow_infinity=False,
+    width=64,
+):
+    lo = -1.7e308 if min_value is None else float(min_value)
+    hi = 1.7e308 if max_value is None else float(max_value)
+    corners = [
+        0.0,
+        -0.0,
+        lo,
+        hi,
+        1.0,
+        -1.0,
+        1.5,
+        2.0**-126,  # f32 normal floor
+        -(2.0**-126),
+        2.0**-149,  # f32 subnormal floor
+        65504.0,  # E5M10 max normal
+        -65504.0,
+        65520.0,  # first value past it (rounds to inf at E5M10)
+        2.0**-24,
+        3.14159265,
+    ]
+    edges = [x for x in corners if lo <= x <= hi]
+    # random: sign * log-uniform magnitude over the representable span,
+    # clipped to the requested bounds; width=32 snaps to an f32 value
+    hi_mag = max(abs(lo), abs(hi), 2.0**-120)
+    e_hi = np.log2(hi_mag)
+
+    def draw(rng: random.Random) -> float:
+        if rng.random() < 0.05:
+            return 0.0
+        mag = 2.0 ** rng.uniform(-130.0, e_hi)
+        x = mag * (1 if rng.random() < 0.5 else -1) * (1.0 + rng.random())
+        x = min(max(x, lo), hi)
+        return float(np.float32(x)) if width == 32 else float(x)
+
+    if width == 32:
+        edges = [float(np.float32(x)) for x in edges]
+        edges = [x for x in edges if lo <= x <= hi]
+    return _Strategy(edges, draw)
+
+
+def _integers(min_value, max_value):
+    lo, hi = int(min_value), int(max_value)
+    corners = [lo, hi, 0, 1, -1, lo + 1, hi - 1]
+    edges = sorted({x for x in corners if lo <= x <= hi})
+
+    def draw(rng: random.Random) -> int:
+        return rng.randint(lo, hi)
+
+    return _Strategy(edges, draw)
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    floats = staticmethod(_floats)
+    integers = staticmethod(_integers)
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record the example budget on the (possibly given-wrapped) function."""
+
+    def decorate(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def _examples(params, rng: random.Random, n: int):
+    """Edge combos first (round-robin so every corner appears), then random."""
+    names = list(params)
+    width = max((len(params[k].edges) for k in names), default=0)
+    count = 0
+    for i in range(width):
+        if count >= n:
+            return
+        yield {
+            k: params[k].edges[i % len(params[k].edges)]
+            for k in names
+            if params[k].edges
+        }
+        count += 1
+    while count < n:
+        yield {k: params[k].draw(rng) for k in names}
+        count += 1
+
+
+def given(**params):
+    """kwargs-only ``@given`` — the form every suite in this repo uses."""
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items() if name not in params]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = _budget(getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for ex in _examples(params, rng, n):
+                try:
+                    fn(*args, **kwargs, **ex)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): {ex!r}"
+                    ) from e
+
+        # hide the strategy params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return decorate
