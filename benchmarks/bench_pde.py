@@ -1,17 +1,22 @@
 """Generic per-stepper PDE benchmark — every registered solver workload
-through the same precision ladder, on BOTH execution planes.
+through the same precision ladder, on ALL execution planes.
 
 One scenario per registered stepper (``repro.pde.known_steppers``): run the
 f32 reference, then each precision in the ladder under
-``execution="reference"`` (the stepwise StepOps engine path) AND
-``execution="fused"`` (whole snapshot intervals as Pallas kernel chunks),
-reporting per-step wall time, the paper's correctness verdict (relative L2
-for decaying fields, field correlation for the SWE basin), static op counts
-of one snapshot-chunk program (``pallas`` = pallas_call count — the fused
-plane collapses a chunk into one; ``hlo`` = lowered instruction count), and
-the §5.3 adjustment counters (``adj=+grow/-shrink``) for tracked runs.
-``main`` fails loudly if a registered stepper has no scenario, so adding a
-workload without benchmarking it is impossible.
+``execution="reference"`` (the stepwise StepOps engine path),
+``execution="fused"`` (whole snapshot intervals as Pallas kernel chunks)
+AND ``execution="megakernel"`` (the entire horizon in ONE pallas_call,
+DESIGN.md §14), reporting per-step wall time, the paper's correctness
+verdict (relative L2 for decaying fields, field correlation for the SWE
+basin), static op counts of one snapshot-chunk program (``pallas`` =
+pallas_call count — the fused plane collapses a chunk into one; ``hlo`` =
+lowered instruction count), the whole-horizon launch count (``launches`` =
+scan-weighted pallas_call count of the full run's program: ``steps/every``
+for the chunked plane, exactly 1 for the megakernel — asserted, that IS
+the tentpole claim), and the §5.3 adjustment counters
+(``adj=+grow/-shrink``) for tracked runs. ``main`` fails loudly if a
+registered stepper has no scenario, so adding a workload without
+benchmarking it is impossible.
 
 CSV rows: ``pde/<case>/<prec>/<exec>,us_per_step,rel=..;corr=..;STATUS;...``
 — captured by ``benchmarks.run`` into ``BENCH_pde.json``. ``--smoke`` (or
@@ -113,6 +118,21 @@ def _iter_subjaxprs(v):
             yield inner
 
 
+def _count_pallas_weighted(jaxpr) -> int:
+    """pallas_call count with scan trip counts multiplied through — i.e.
+    the number of kernel LAUNCHES the program issues at runtime, not the
+    number of call sites in the jaxpr text."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        w = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _iter_subjaxprs(v):
+                n += w * _count_pallas_weighted(sub)
+    return n
+
+
 def chunk_op_counts(sim: Simulation, chunk: int, execution: str, storage: str = "f32"):
     """Static op counts of one snapshot-chunk program: (pallas_calls,
     lowered instruction count). The fused plane's signature is one
@@ -128,21 +148,31 @@ def chunk_op_counts(sim: Simulation, chunk: int, execution: str, storage: str = 
             storage=storage,
         ).state
 
-    def count_pallas(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                for sub in _iter_subjaxprs(v):
-                    n += count_pallas(sub)
-        return n
-
     traced = jax.jit(fn).trace(state0)  # one trace serves both counts
-    n_pallas = count_pallas(traced.jaxpr.jaxpr)
+    n_pallas = _count_pallas_weighted(traced.jaxpr.jaxpr)
     lowered = traced.lower().as_text()
     n_hlo = sum(1 for line in lowered.splitlines() if " = " in line)
     return n_pallas, n_hlo
+
+
+def horizon_launches(
+    sim: Simulation, steps: int, every: int, execution: str, storage: str = "f32"
+) -> int:
+    """Kernel launches of the FULL horizon program (scan-weighted
+    pallas_call count): ``steps/every`` chunks on the fused plane, 0 on the
+    reference plane, and — the whole point — exactly 1 on the megakernel
+    plane, snapshots and remainder included."""
+    import jax
+
+    state0 = sim.stepper.init_state(sim.cfg)
+
+    def fn(s0):
+        return sim.run(
+            steps, snapshot_every=every, state0=s0, execution=execution,
+            storage=storage,
+        ).state
+
+    return _count_pallas_weighted(jax.jit(fn).trace(state0).jaxpr.jaxpr)
 
 
 def run_case(name: str, sc: Scenario, smoke: bool = False):
@@ -157,13 +187,18 @@ def run_case(name: str, sc: Scenario, smoke: bool = False):
     rows = []
     for prec_name in sc.precs:
         prec = PREC_LADDER[prec_name]
-        storages = [("reference", "f32"), ("fused", "f32")]
+        # chunked-vs-mega paired rows: every fused row gets a megakernel
+        # partner (same storage), so launches/bytes/us compare side by side
+        storages = [("reference", "f32"), ("fused", "f32"), ("megakernel", "f32")]
         if prec_name in PACKED_PRECS:
             storages.append(("fused", "packed"))  # the bandwidth pair row
+            storages.append(("megakernel", "packed"))
         for execution, storage in storages:
             sim = Simulation(name, cfg, prec)
             if execution == "fused" and not sim.fused_eligible():
                 continue  # mode/stepper outside the fused plane: no pair row
+            if execution == "megakernel" and not sim.mega_eligible():
+                continue  # outside the megakernel plane: no pair row
             t0 = time.perf_counter()
             res = sim.run(steps, execution=execution, storage=storage)
             state = res.state
@@ -171,6 +206,13 @@ def run_case(name: str, sc: Scenario, smoke: bool = False):
             out = observe(stepper, cfg, out_state, sc.offset)
             us = (time.perf_counter() - t0) * 1e6 / steps
             n_pallas, n_hlo = chunk_op_counts(sim, chunk, execution, storage)
+            launches = horizon_launches(sim, steps, chunk, execution, storage)
+            if execution == "megakernel" and launches != 1:
+                raise SystemExit(
+                    f"megakernel row {name}/{prec_name}/{storage} issued "
+                    f"{launches} kernel launches for the horizon; the "
+                    "whole-horizon contract is exactly 1"
+                )
             row = dict(
                 case=sc.label or name,
                 prec=prec_name,
@@ -178,6 +220,7 @@ def run_case(name: str, sc: Scenario, smoke: bool = False):
                 us_per_step=us,
                 pallas_calls=n_pallas,
                 hlo_ops=n_hlo,
+                launches=launches,
                 # one read + one write of the carried state per step
                 bytes_per_step=2 * state_nbytes(state),
                 **measure(out, ref, sc.judge),
@@ -198,6 +241,7 @@ def format_row(r, suite: str = "pde") -> str:
     derived = (
         f"rel={r['rel']:.4f};corr={r['corr']:.4f};{status};"
         f"pallas={r['pallas_calls']};hlo={r['hlo_ops']}"
+        f";launches={r['launches']}"
         f";bytes_per_step={r['bytes_per_step']}"
     )
     if "grow_adjusts" in r:

@@ -40,6 +40,10 @@ from repro.configs import SHAPES, get_config
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s
 LINK_BW = 50e9  # B/s per ICI link
+#: fixed dispatch cost charged per pallas_call launch (host->device setup,
+#: grid program bring-up) — the term the megakernel amortizes: a chunked
+#: horizon pays it steps/every times, the megakernel exactly once.
+LAUNCH_OVERHEAD_US = 4.0
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
@@ -153,10 +157,71 @@ def pde_storage_rows():
     return rows
 
 
+def pde_step_bound_us(nbytes_per_step: float, steps: int, launches: int) -> float:
+    """Analytic per-step lower bound for one horizon: boundary HBM traffic
+    at bandwidth + the fixed launch overhead amortized over the horizon's
+    steps. The bench's measured us_per_step can approach but not beat this
+    (``benchmarks.run --check`` flags rows that do as measurement noise)."""
+    return nbytes_per_step / HBM_BW * 1e6 + LAUNCH_OVERHEAD_US * launches / steps
+
+
+def pde_launch_rows(steps: int = 240):
+    """Chunked-vs-megakernel launch-overhead model, per stepper x storage.
+
+    For each registered stepper's default config and snapshot cadence: the
+    chunked fused plane issues one pallas_call per snapshot interval
+    (``steps/every`` launches per horizon, remainder included) while the
+    megakernel issues exactly 1. Each row reports the per-step analytic
+    bound (:func:`pde_step_bound_us`), its two terms, and which one
+    dominates — ``launch``-bound horizons are the megakernel's win case,
+    ``bandwidth``-bound ones are the packed plane's. Pure metadata
+    arithmetic, nothing is stepped or jitted.
+    """
+    import jax
+
+    from repro.pack import pack_state, state_nbytes
+    from repro.pde import get_stepper, known_steppers
+    from repro.precision import PRESETS
+
+    fmt = PRESETS["r2f2_16"].fmt
+    rows = []
+    for name in known_steppers():
+        stepper = get_stepper(name)
+        cfg = stepper.default_config()
+        state = jax.tree_util.tree_map(jax.numpy.asarray, stepper.init_state(cfg))
+        every = max(1, steps // stepper.snapshots_default)
+        n_chunks = steps // every + (1 if steps % every else 0)
+        for storage, nbytes in (
+            ("f32", 2 * state_nbytes(state)),
+            ("packed", 2 * state_nbytes(pack_state(state, fmt))),
+        ):
+            for plane, launches in (("chunked", n_chunks), ("megakernel", 1)):
+                t_mem_us = nbytes / HBM_BW * 1e6
+                t_launch_us = LAUNCH_OVERHEAD_US * launches / steps
+                bound = pde_step_bound_us(nbytes, steps, launches)
+                rows.append(
+                    (
+                        f"roofline/pde_launch/{name}/{plane}/{storage}",
+                        bound,
+                        f"launches={launches};steps={steps}"
+                        f";bytes_per_step={nbytes}"
+                        f";t_mem_us={t_mem_us:.4f};t_launch_us={t_launch_us:.4f}"
+                        f";bound={'launch' if t_launch_us > t_mem_us else 'bandwidth'}"
+                        f";launch_overhead_us={LAUNCH_OVERHEAD_US}",
+                    )
+                )
+    return rows
+
+
 def main():
     print("# roofline — PDE carried-state HBM traffic per step (analytic)")
     print("# us column = memory-roofline time of one step's state traffic")
     for name, us, derived in pde_storage_rows():
+        print(f"{name},{us:.4f},{derived}")
+    print()
+    print("# roofline — chunked-vs-megakernel launch model (analytic)")
+    print("# us column = per-step bound: HBM traffic + amortized launch overhead")
+    for name, us, derived in pde_launch_rows():
         print(f"{name},{us:.4f},{derived}")
     print()
     print("# roofline — single-pod 16x16 (256 chips); terms in ms per step")

@@ -1,7 +1,7 @@
 """The registered PDE scenario zoo, one precision ladder each.
 
     PYTHONPATH=src python examples/pde_zoo.py [--steppers a,b] [--ensemble N]
-                                              [--execution reference|fused|auto]
+                                              [--execution reference|fused|megakernel|auto]
 
 Drives every workload through the shared ``repro.pde.solver.Simulation``
 (no per-workload code): f32 reference, the failing E5M10 baseline, 16-bit
@@ -20,6 +20,12 @@ entry as multi-substep Pallas kernel chunks — same verdicts, one
 kernels' range evidence::
 
     PYTHONPATH=src python examples/pde_zoo.py --execution fused --steppers burgers1d
+
+Megakernel quickstart (DESIGN.md §14): ``--execution megakernel`` runs each
+entry's ENTIRE horizon — snapshots and the on-chip adjust unit included —
+in exactly one ``pallas_call``, bit-identical to the fused plane::
+
+    PYTHONPATH=src python examples/pde_zoo.py --execution megakernel --steppers burgers1d
 
 Profiling quickstart (DESIGN.md §11): ``--profile`` additionally captures
 each scenario's range distributions on the f32 run and prints the
@@ -56,8 +62,9 @@ def main():
     ap.add_argument(
         "--execution",
         default="reference",
-        choices=("reference", "fused", "auto"),
-        help="arithmetic plane: stepwise engines, Pallas kernel chunks, or auto",
+        choices=("reference", "fused", "megakernel", "auto"),
+        help="arithmetic plane: stepwise engines, Pallas kernel chunks, the "
+        "whole-horizon megakernel, or auto (prefers megakernel)",
     )
     ap.add_argument(
         "--profile",

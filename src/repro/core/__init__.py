@@ -24,7 +24,15 @@ from .flexformat import (
     unbiased_exponent,
     unpack_r2f2,
 )
-from .policy import PRESETS, PrecisionConfig, RangeTracker, tracker_init, tracker_k, tracker_update
+from .policy import (
+    PRESETS,
+    PrecisionConfig,
+    RangeTracker,
+    adjust_step,
+    tracker_init,
+    tracker_k,
+    tracker_update,
+)
 from .r2f2 import (
     OPS,
     R2F2Stats,

@@ -40,6 +40,7 @@ __all__ = [
     "PrecisionConfig",
     "KNOWN_MODES",
     "RangeTracker",
+    "adjust_step",
     "tracker_init",
     "tracker_observe",
     "tracker_update",
@@ -191,48 +192,88 @@ def evidence_k_need(ae, be, cfg: PrecisionConfig, op: str = "mul") -> jnp.ndarra
     return _k_for(step_hi + cfg.headroom, step_lo - cfg.headroom, cfg.fmt)
 
 
-def tracker_observe(
-    state: RangeTracker, site: int, ae, be, cfg: PrecisionConfig, op: str = "mul"
-) -> RangeTracker:
-    """Fold one operation's operand max-exponent evidence ``(ae, be)``
-    into the tracker and re-pick the site's split, mirroring the paper's
-    adjust unit across steps: grow immediately on demand (overflow
-    semantics), shrink only when the EMA shows persistent redundancy.
-    ``op`` picks the envelope law — alignment-shift for add, quotient-range
-    for div (see :data:`repro.core.r2f2.OPS`); the default keeps the
-    paper's multiply semantics.
+def adjust_step(
+    k,
+    hi_ema,
+    lo_ema,
+    overflow_steps,
+    shrink_steps,
+    ae,
+    be,
+    cfg: PrecisionConfig,
+    op: str = "mul",
+    k_bounds: Optional[Tuple[int, int]] = None,
+):
+    """One tick of the paper's adjust unit, in jax-pure scalar-state form:
+    fold one operation's operand max-exponent evidence ``(ae, be)`` into a
+    single site's carried state and re-pick its split. Grow immediately on
+    demand (overflow semantics); shrink only when the EMA shows persistent
+    redundancy; count both events (the §5.3 adjustment counters).
 
-    The evidence is exactly what the fused Pallas kernels emit per substep
-    (per-site max-exponent reductions, cross-block maxed), so the fused
-    execution plane's chunk fold-in and the stepwise ``tracker_update``
-    apply identical adjust-unit math.
+    All five state values are scalars (or broadcastable arrays) — no
+    ``RangeTracker`` gather/scatter — so the law runs unchanged inside a
+    Pallas kernel body where the tracker lives in registers/SMEM and
+    evolves on-chip each substep (``repro.kernels.mega``), exactly like
+    the hardware unit sitting next to the multiplier. ``k_bounds`` is this
+    site's static ``(k_lo, k_hi)`` clamp, or None for unconstrained.
+
+    Returns ``(k, hi_ema, lo_ema, overflow_steps, shrink_steps)`` updated.
     """
     fmt = cfg.fmt
     step_hi, step_lo = evidence_bounds(ae, be, op)
 
-    hi_ema = cfg.ema * state.hi_ema[site] + (1.0 - cfg.ema) * step_hi
-    hi_ema = jnp.maximum(hi_ema, step_hi)  # never smooth away a spike
-    lo_ema = cfg.ema * state.lo_ema[site] + (1.0 - cfg.ema) * step_lo
-    lo_ema = jnp.minimum(lo_ema, step_lo)
+    hi = cfg.ema * hi_ema + (1.0 - cfg.ema) * step_hi
+    hi = jnp.maximum(hi, step_hi)  # never smooth away a spike
+    lo = cfg.ema * lo_ema + (1.0 - cfg.ema) * step_lo
+    lo = jnp.minimum(lo, step_lo)
 
     k_need_now = _k_for(step_hi + cfg.headroom, step_lo - cfg.headroom, fmt)
-    k_need_ema = _k_for(hi_ema + cfg.headroom, lo_ema - cfg.headroom, fmt)
-    k_cur = state.k[site]
+    k_need_ema = _k_for(hi + cfg.headroom, lo - cfg.headroom, fmt)
     # grow immediately on demand; shrink only toward the persistent-need EMA
-    k_new = jnp.maximum(k_need_now, jnp.minimum(k_cur, k_need_ema))
-    if cfg.k_bounds is not None:
-        # the autotuner's floor/ceiling hints (site must be a static index)
-        lo_b, hi_b = cfg.k_bounds[site]
-        k_new = jnp.clip(k_new, lo_b, hi_b)
-    grew = k_new > k_cur
-    shrank = k_new < k_cur
+    k_new = jnp.maximum(k_need_now, jnp.minimum(k, k_need_ema))
+    if k_bounds is not None:
+        # the autotuner's floor/ceiling hints for this site
+        k_new = jnp.clip(k_new, k_bounds[0], k_bounds[1])
+    grew = (k_new > k).astype(jnp.int32)
+    shrank = (k_new < k).astype(jnp.int32)
+    return k_new, hi, lo, overflow_steps + grew, shrink_steps + shrank
 
+
+def tracker_observe(
+    state: RangeTracker, site: int, ae, be, cfg: PrecisionConfig, op: str = "mul"
+) -> RangeTracker:
+    """Fold one operation's operand max-exponent evidence ``(ae, be)``
+    into the tracker and re-pick the site's split: gather the site's
+    scalar state, apply :func:`adjust_step` (the jax-pure adjust-unit
+    law), scatter back. ``op`` picks the envelope law — alignment-shift
+    for add, quotient-range for div (see :data:`repro.core.r2f2.OPS`);
+    the default keeps the paper's multiply semantics.
+
+    The evidence is exactly what the fused Pallas kernels emit per substep
+    (per-site max-exponent reductions, cross-block maxed), so the fused
+    execution plane's chunk fold-in, the megakernel's on-chip per-substep
+    adjust, and the stepwise ``tracker_update`` apply identical
+    adjust-unit math.
+    """
+    kb = None if cfg.k_bounds is None else cfg.k_bounds[site]
+    k_new, hi_ema, lo_ema, ov, sh = adjust_step(
+        state.k[site],
+        state.hi_ema[site],
+        state.lo_ema[site],
+        state.overflow_steps[site],
+        state.shrink_steps[site],
+        ae,
+        be,
+        cfg,
+        op,
+        k_bounds=kb,
+    )
     return RangeTracker(
         hi_ema=state.hi_ema.at[site].set(hi_ema),
         lo_ema=state.lo_ema.at[site].set(lo_ema),
         k=state.k.at[site].set(k_new),
-        overflow_steps=state.overflow_steps.at[site].add(grew.astype(jnp.int32)),
-        shrink_steps=state.shrink_steps.at[site].add(shrank.astype(jnp.int32)),
+        overflow_steps=state.overflow_steps.at[site].set(ov),
+        shrink_steps=state.shrink_steps.at[site].set(sh),
     )
 
 

@@ -107,3 +107,34 @@ class Advection1DStepper(Stepper):
             interpret=interpret,
             storage=storage,
         )
+
+    def mega_step(
+        self,
+        u,
+        cfg: AdvectionConfig,
+        prec,
+        steps: int,
+        every: int,
+        *,
+        tracker=None,
+        collect_evidence: bool = False,
+        capture=None,
+        interpret=None,
+        storage: str = "f32",
+    ):
+        from repro.kernels.mega import advection1d_mega  # lazy: pallas off cold paths
+
+        return advection1d_mega(
+            u,
+            speed=cfg.speed,
+            dtodx=cfg.dtodx,
+            prec=prec,
+            steps=steps,
+            every=every,
+            sites=self.sites,
+            tracker=tracker,
+            collect_evidence=collect_evidence,
+            capture=capture,
+            interpret=interpret,
+            storage=storage,
+        )

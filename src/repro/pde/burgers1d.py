@@ -104,3 +104,34 @@ class Burgers1DStepper(Stepper):
             interpret=interpret,
             storage=storage,
         )
+
+    def mega_step(
+        self,
+        u,
+        cfg: BurgersConfig,
+        prec,
+        steps: int,
+        every: int,
+        *,
+        tracker=None,
+        collect_evidence: bool = False,
+        capture=None,
+        interpret=None,
+        storage: str = "f32",
+    ):
+        from repro.kernels.mega import burgers1d_mega  # lazy: pallas off cold paths
+
+        return burgers1d_mega(
+            u,
+            dt=cfg.dt,
+            dx=cfg.dx,
+            prec=prec,
+            steps=steps,
+            every=every,
+            sites=self.sites,
+            tracker=tracker,
+            collect_evidence=collect_evidence,
+            capture=capture,
+            interpret=interpret,
+            storage=storage,
+        )

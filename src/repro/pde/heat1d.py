@@ -137,6 +137,37 @@ class Heat1DStepper(Stepper):
         out, ev = res
         return (out.with_view((cfg.nx,)) if packed else out[0]), ev
 
+    def mega_step(
+        self,
+        u,
+        cfg: HeatConfig,
+        prec,
+        steps: int,
+        every: int,
+        *,
+        tracker=None,
+        collect_evidence: bool = False,
+        capture=None,
+        interpret=None,
+        storage: str = "f32",
+    ):
+        from repro.kernels.mega import heat1d_mega  # lazy: pallas off cold paths
+
+        return heat1d_mega(
+            u,
+            alpha=cfg.alpha,
+            dtodx2=cfg.dtodx2,
+            prec=prec,
+            steps=steps,
+            every=every,
+            sites=self.sites,
+            tracker=tracker,
+            collect_evidence=collect_evidence,
+            capture=capture,
+            interpret=interpret,
+            storage=storage,
+        )
+
 
 _STEPPER = Heat1DStepper()
 

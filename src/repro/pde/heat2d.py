@@ -143,3 +143,34 @@ class Heat2DStepper(Stepper):
             interpret=interpret,
             storage=storage,
         )
+
+    def mega_step(
+        self,
+        u,
+        cfg: Heat2DConfig,
+        prec,
+        steps: int,
+        every: int,
+        *,
+        tracker=None,
+        collect_evidence: bool = False,
+        capture=None,
+        interpret=None,
+        storage: str = "f32",
+    ):
+        from repro.kernels.mega import heat2d_mega  # lazy: pallas off cold paths
+
+        return heat2d_mega(
+            u,
+            alpha=cfg.alpha,
+            dtodx2=cfg.dtodx2,
+            prec=prec,
+            steps=steps,
+            every=every,
+            sites=self.sites,
+            tracker=tracker,
+            collect_evidence=collect_evidence,
+            capture=capture,
+            interpret=interpret,
+            storage=storage,
+        )

@@ -24,16 +24,21 @@ Steppers register under a string key (:mod:`repro.pde.registry`, mirroring
 ``precision/registry.py``), so benchmarks, examples and docs enumerate
 scenarios instead of importing workload modules. See DESIGN.md §9.
 
-The driver owns TWO arithmetic planes (``run(..., execution=...)``,
-DESIGN.md §10): the reference ``StepOps`` path above, and a **fused
+The driver owns THREE arithmetic planes (``run(..., execution=...)``,
+DESIGN.md §10/§14): the reference ``StepOps`` path above; a **fused
 execution plane** where whole snapshot intervals run as multi-substep
 Pallas kernel chunks through the stepper's optional ``fused_step`` hook —
 one HBM round trip per chunk, per-block runtime splits selected in VMEM,
 and the kernels' per-site range evidence folded into the carried tracker
 between chunks (:func:`repro.precision.fold_evidence`), so tracked modes
-ride the fast path with the same adjust-unit semantics. ``"auto"`` picks
-fused when :func:`repro.precision.fused_eligible` accepts and falls back to
-the reference path otherwise.
+ride the fast path with the same adjust-unit semantics; and a **megakernel
+plane** where the stepper's optional ``mega_step`` hook runs the ENTIRE
+horizon — snapshots, boundary storage rounding, and the per-substep
+on-chip adjust unit (:func:`repro.core.policy.adjust_step`) — in ONE
+``pallas_call``, bit-identical to the chunked plane. ``"auto"`` prefers
+the megakernel when :func:`repro.precision.mega_eligible` accepts, then
+fused when :func:`repro.precision.fused_eligible` accepts, then the
+reference path.
 """
 
 from __future__ import annotations
@@ -47,7 +52,14 @@ import jax.numpy as jnp
 from repro.core.policy import PrecisionConfig
 from repro.dist.sharding import constrain
 from repro.pack import is_packed, pack_state, storage_quantize, unpack_state
-from repro.precision import fold_evidence, fused_eligible, get_engine, site_tracker_init
+from repro.precision import (
+    fold_evidence,
+    fused_eligible,
+    get_engine,
+    mega_eligible,
+    site_tracker_init,
+)
+from repro.precision.sites import rewrap
 from repro.pde.registry import get_stepper
 from repro.profile.capture import CaptureResult, CaptureSpec, pair_exp_hist, site_evidence
 
@@ -201,10 +213,30 @@ class Stepper:
     #: False (e.g. SWE's flux-kernel stepper) means the driver packs at the
     #: XLA boundary instead: same bits, f32 traffic inside the chunk.
     fused_packed: bool = False
+    #: Optional whole-horizon megakernel hook (DESIGN.md §14). A stepper
+    #: with one overrides this with a method of signature
+    #: ``mega_step(state, cfg, prec, steps, every, *, tracker=None,
+    #: collect_evidence=False, capture=None, interpret=None,
+    #: storage="f32") -> repro.kernels.mega.MegaResult`` that runs the
+    #: ENTIRE horizon — snapshots, boundary storage rounding, and (for
+    #: tracked modes) the per-substep on-chip adjust unit — in ONE
+    #: ``pallas_call``. ``tracker`` is the raw RangeTracker state (site
+    #: rows ordered like ``sites``); evolved state comes back in the
+    #: result. ``None`` means "chunked planes only".
+    mega_step = None
 
     def fused_supported(self, cfg, prec: PrecisionConfig) -> bool:
         """Shape/config eligibility gate for the fused body (mode
         eligibility is the policy's side: ``precision.fused_eligible``)."""
+        del cfg, prec
+        return True
+
+    def mega_supported(self, cfg, prec: PrecisionConfig) -> bool:
+        """Shape/config eligibility gate for the megakernel. The megakernel
+        keeps one block per state leaf, so steppers whose chunked kernels
+        tile the field must refuse configs that exceed one kernel block
+        (per-tile split selection would otherwise diverge from the
+        whole-field selection and break cross-plane bit parity)."""
         del cfg, prec
         return True
 
@@ -285,19 +317,33 @@ class Simulation:
         """Can this (stepper, cfg, prec) run on the fused execution plane?"""
         return fused_eligible(self.prec, self.stepper, self.cfg)
 
+    def mega_eligible(self) -> bool:
+        """Can this (stepper, cfg, prec) run on the whole-horizon megakernel
+        plane (DESIGN.md §14)?"""
+        return mega_eligible(self.prec, self.stepper, self.cfg)
+
     def _resolve_execution(self, execution: str) -> str:
-        if execution not in ("reference", "fused", "auto"):
+        if execution not in ("reference", "fused", "megakernel", "auto"):
             raise ValueError(
                 f"unknown execution mode {execution!r}; "
-                "expected 'reference' | 'fused' | 'auto'"
+                "expected 'reference' | 'fused' | 'megakernel' | 'auto'"
             )
         if execution == "auto":
+            if self.mega_eligible():
+                return "megakernel"
             return "fused" if self.fused_eligible() else "reference"
         if execution == "fused" and not self.fused_eligible():
             raise ValueError(
                 f"stepper {self.stepper.name!r} is not fused-eligible under "
                 f"mode {self.prec.mode!r} (no fused_step hook, unknown fused "
                 "arithmetic family, or unsupported shape); use "
+                "execution='auto' for graceful fallback"
+            )
+        if execution == "megakernel" and not self.mega_eligible():
+            raise ValueError(
+                f"stepper {self.stepper.name!r} is not megakernel-eligible "
+                f"under mode {self.prec.mode!r} (no mega_step hook, unknown "
+                "fused arithmetic family, or unsupported shape); use "
                 "execution='auto' for graceful fallback"
             )
         return execution
@@ -381,7 +427,15 @@ class Simulation:
           kernel chunks via the stepper's ``fused_step`` hook; tracked modes
           fold the kernels' per-site range evidence into the carried tracker
           between chunks. Raises if the stepper/mode is not fused-eligible.
-        * ``"auto"`` — ``"fused"`` when eligible, else ``"reference"``.
+        * ``"megakernel"`` — the ENTIRE horizon runs in ONE ``pallas_call``
+          via the stepper's ``mega_step`` hook (DESIGN.md §14): snapshots
+          stream out at their cadence and the precision adjust unit evolves
+          on-chip per substep, so there is no per-chunk launch or HBM round
+          trip. Bit-identical to ``"fused"`` (same arithmetic, same
+          boundary rounding, same adjust law at the same cadence). Raises
+          if the stepper/mode is not megakernel-eligible.
+        * ``"auto"`` — ``"megakernel"`` when eligible, else ``"fused"``
+          when eligible, else ``"reference"``.
 
         ``capture`` (None | True | :class:`repro.profile.capture.CaptureSpec`)
         turns on range-distribution capture (DESIGN.md §11): the result's
@@ -412,7 +466,12 @@ class Simulation:
             tracker = self.init_tracker()
         spec = self._resolve_capture(capture)
         every = snapshot_every or max(1, steps // stepper.snapshots_default)
-        if self._resolve_execution(execution) == "fused":
+        resolved = self._resolve_execution(execution)
+        if resolved == "megakernel":
+            return self._run_mega(
+                steps, every, state0, tracker, prec=prec, capture=spec, storage=storage
+            )
+        if resolved == "fused":
             return self._run_fused(
                 steps, every, state0, tracker, prec=prec, capture=spec, storage=storage
             )
@@ -590,20 +649,78 @@ class Simulation:
         rem = steps - n_out * every
         carry = (state0, tracker)
         carry, snaps = jax.lax.scan(outer, carry, None, length=n_out)
-        profile = None
+        evidence = exp_time = exp_total = None
         if capture is not None:
             snaps, evs, exp_time = snaps
             evidence = evs.reshape((n_out * every, len(stepper.sites), 2))
             exp_total = jnp.sum(exp_time, axis=0, dtype=jnp.int32)
-            if rem:
-                carry, ev_rem, counts_rem = chunk(carry, rem)
+        if rem:
+            # the one remainder epilogue: a short chunk under the same law as
+            # the in-loop cadence (storage rounding included), its evidence
+            # and counts appended to the captured stream when profiling
+            carry, ev_rem, counts_rem = chunk(carry, rem)
+            if capture is not None:
                 evidence = jnp.concatenate([evidence, ev_rem], axis=0)
                 exp_total = exp_total + counts_rem
-            profile = CaptureResult(evidence, exp_time, exp_total)
-        elif rem:
-            carry, _, _ = chunk(carry, rem)
         state, tracker = carry
-        return SimResult(state, snaps, tracker, profile)
+        return SimResult(
+            state, snaps, tracker,
+            self._assemble_profile(capture, evidence, exp_time, exp_total),
+        )
+
+    @staticmethod
+    def _assemble_profile(capture, evidence, exp_time, exp_total):
+        """Shared capture epilogue for the fused and megakernel planes."""
+        if capture is None:
+            return None
+        return CaptureResult(evidence, exp_time, exp_total)
+
+    def _run_mega(
+        self,
+        steps: int,
+        every: int,
+        state0,
+        tracker,
+        *,
+        prec=None,
+        capture=None,
+        storage: str = "f32",
+    ) -> SimResult:
+        """The megakernel plane (DESIGN.md §14): the whole horizon in ONE
+        ``pallas_call``.
+
+        Where :meth:`_run_fused` re-enters a kernel per snapshot interval
+        and folds range evidence on the host between chunks, here the
+        stepper's ``mega_step`` keeps state AND adjust unit on-chip for all
+        ``steps`` substeps: tracker rows evolve per substep through the
+        jax-pure scalar law :func:`repro.core.policy.adjust_step`, the
+        *datapath* floor latches at snapshot boundaries — the chunked
+        plane's fold cadence, which is what keeps the two planes
+        bit-identical — and snapshots / evidence / capture histograms
+        stream out as secondary kernel outputs at their cadence. Boundary
+        storage rounding (``"quantized"``/``"packed"``) happens in-kernel
+        with the shared pack helpers: same splits, same bits, one (virtual)
+        pack per boundary.
+        """
+        stepper, cfg = self.stepper, self.cfg
+        prec = self.prec if prec is None else prec
+        res = stepper.mega_step(
+            state0,
+            cfg,
+            prec,
+            steps,
+            every,
+            tracker=None if tracker is None else tracker.state,
+            capture=capture,
+            storage=storage,
+        )
+        snaps = jax.vmap(lambda s: stepper.observables(s, cfg))(res.snaps)
+        if tracker is not None:
+            tracker = rewrap(tracker, res.tracker)
+        return SimResult(
+            res.state, snaps, tracker,
+            self._assemble_profile(capture, res.evidence, res.exp_time, res.exp_total),
+        )
 
     # -- ensembles ----------------------------------------------------------
 

@@ -226,6 +226,49 @@ class SWE2DStepper(Stepper):
             return U, ev_steps[:, 0], jnp.sum(counts, axis=0, dtype=jnp.int32)
         return U, None if ys is None else ys[:, 0]
 
+    def mega_supported(self, cfg: SWEConfig, prec) -> bool:
+        """Megakernel parity needs the chunked flux kernel's grid to be a
+        single block: the momentum-flux midpoint arrays are ``(nx-1, ny)``,
+        so both extents must fit one ``prec.kernel_blocks`` tile — otherwise
+        the chunked plane picks per-tile splits the whole-field megakernel
+        cannot reproduce."""
+        return (cfg.nx - 1) <= prec.kernel_blocks[0] and cfg.ny <= prec.kernel_blocks[1]
+
+    def mega_step(
+        self,
+        U,
+        cfg: SWEConfig,
+        prec,
+        steps: int,
+        every: int,
+        *,
+        tracker=None,
+        collect_evidence: bool = False,
+        capture=None,
+        interpret=None,
+        storage: str = "f32",
+    ):
+        """Whole-horizon run: the ENTIRE Lax-Wendroff update — the
+        substituted momentum-flux equation on the policy datapath, every
+        other sub-equation in f32 — plus snapshots and the adjust unit, in
+        one ``pallas_call`` (:func:`repro.kernels.mega.swe2d_mega`)."""
+        from repro.kernels.mega import swe2d_mega  # lazy: pallas off cold paths
+
+        return swe2d_mega(
+            U,
+            cfg=cfg,
+            prec=prec,
+            steps=steps,
+            every=every,
+            sites=self.sites,
+            site_ops=self.site_ops,
+            tracker=tracker,
+            collect_evidence=collect_evidence,
+            capture=capture,
+            interpret=interpret,
+            storage=storage,
+        )
+
     def observables(self, U, cfg: SWEConfig):
         return U[0]  # snapshot h only
 

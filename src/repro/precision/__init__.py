@@ -37,14 +37,26 @@ delegating shims for backward compatibility.
 from __future__ import annotations
 
 from .engine import PrecisionEngine
-from .fusion import FUSED_FAMILIES, fold_evidence, fused_eligible, fused_family
+from .fusion import (
+    FUSED_FAMILIES,
+    fold_evidence,
+    fused_eligible,
+    fused_family,
+    mega_eligible,
+)
 from .registry import get_engine, is_known_mode, known_modes, register_engine
 from .sites import SiteTracker, resolve_site, site_tracker_init
 from . import engines as _engines  # noqa: F401 — registers the six builtins
 
 # Convenience re-exports: the precision surface in one import.
 from repro.core.flexformat import FlexFormat
-from repro.core.policy import PRESETS, PrecisionConfig, RangeTracker, tracker_init
+from repro.core.policy import (
+    PRESETS,
+    PrecisionConfig,
+    RangeTracker,
+    adjust_step,
+    tracker_init,
+)
 
 __all__ = [
     # engine plumbing
@@ -61,6 +73,7 @@ __all__ = [
     "FUSED_FAMILIES",
     "fused_family",
     "fused_eligible",
+    "mega_eligible",
     "fold_evidence",
     # functional API
     "prepare_operand",
@@ -77,6 +90,7 @@ __all__ = [
     "PrecisionConfig",
     "PRESETS",
     "RangeTracker",
+    "adjust_step",
     "tracker_init",
 ]
 

@@ -34,7 +34,13 @@ from repro.core.policy import PrecisionConfig, tracker_observe
 
 from .sites import SiteTracker, rewrap
 
-__all__ = ["FUSED_FAMILIES", "fused_family", "fused_eligible", "fold_evidence"]
+__all__ = [
+    "FUSED_FAMILIES",
+    "fused_family",
+    "fused_eligible",
+    "mega_eligible",
+    "fold_evidence",
+]
 
 #: precision mode -> in-kernel arithmetic family (see module docstring).
 FUSED_FAMILIES = {
@@ -64,6 +70,25 @@ def fused_eligible(prec: PrecisionConfig, stepper, cfg=None) -> bool:
     if not callable(getattr(stepper, "fused_step", None)):
         return False
     supported = getattr(stepper, "fused_supported", None)
+    return bool(supported(cfg, prec)) if callable(supported) else True
+
+
+def mega_eligible(prec: PrecisionConfig, stepper, cfg=None) -> bool:
+    """Can this (policy, stepper, config) run on the whole-horizon megakernel
+    plane (DESIGN.md §14)?
+
+    Same structure as :func:`fused_eligible`, against the stepper's
+    ``mega_step`` hook and its ``mega_supported`` shape gate. The megakernel
+    keeps one block per state leaf, so steppers whose chunked kernels tile
+    the field (per-tile split selection) must refuse configs whose fields
+    exceed one kernel block — that is what keeps megakernel arithmetic
+    bit-identical to the chunked plane.
+    """
+    if fused_family(prec.mode) is None:
+        return False
+    if not callable(getattr(stepper, "mega_step", None)):
+        return False
+    supported = getattr(stepper, "mega_supported", None)
     return bool(supported(cfg, prec)) if callable(supported) else True
 
 

@@ -34,7 +34,7 @@ def main(argv=None) -> int:
                     help="comma-separated presets/modes")
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--execution", default="auto",
-                    choices=("auto", "reference", "fused"))
+                    choices=("auto", "reference", "fused", "megakernel"))
     ap.add_argument("--max-bucket", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced burst for the CI fast tier")
