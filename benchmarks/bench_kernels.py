@@ -6,28 +6,20 @@ at bf16 operand width (half of f32's HBM bytes at equal MXU rate), while
 the bit-exact emulation path costs ~8 elementwise u32 ops per quantization.
 On CPU the numbers below time the emulation; on a TPU backend the same
 call sites compile the Pallas kernels natively.
+
+Timing goes through :func:`repro.obs.timing.measure` — the shared helper
+every bench suite uses — so each row's steady-state ``us_per_call`` is the
+headline number and the first-call trace+compile time rides along as a
+``compile_us`` derived field instead of silently inflating the mean.
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flexformat import FlexFormat
 from repro.kernels import ops, ref
-
-
-def _time(fn, *args, iters=3, **kw):
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6, out
+from repro.obs.timing import measure
 
 
 def main():
@@ -35,32 +27,47 @@ def main():
     fmt = FlexFormat(3, 9, 3)
 
     x = rng.normal(0, 1, (1024, 1024)).astype(np.float32)
-    us_k, (yk, kk) = _time(ops.r2f2_quantize, x, fmt)
+    tk = measure(ops.r2f2_quantize, x, fmt)
+    yk, kk = tk.result
     yr, kr = ref.r2f2_quantize_ref(x, fmt=fmt)
     match = np.array_equal(np.asarray(yk), np.asarray(yr))
-    print(f"kernel/r2f2_quantize_1024,{us_k:.0f},bitexact_vs_ref={match}")
+    print(
+        f"kernel/r2f2_quantize_1024,{tk.us_per_call:.0f},"
+        f"bitexact_vs_ref={match};compile_us={tk.compile_us:.0f}"
+    )
 
     a = rng.normal(0, 1, (512, 512)).astype(np.float32)
     b = rng.normal(0, 0.05, (512, 512)).astype(np.float32)
-    us_m, cm = _time(ops.r2f2_matmul, a, b, fmt)
+    tm = measure(ops.r2f2_matmul, a, b, fmt)
+    cm = tm.result
     cr = ref.r2f2_matmul_ref(a, b, fmt=fmt)
     dev = float(np.max(np.abs(np.asarray(cm) - np.asarray(cr))))
     rel = float(np.linalg.norm(np.asarray(cm) - a @ b) / np.linalg.norm(a @ b))
-    gflops = 2 * 512**3 / (us_m / 1e6) / 1e9
-    print(f"kernel/r2f2_matmul_512,{us_m:.0f},max_dev_vs_ref={dev:.2e};rel_vs_f32={rel:.5f};emul_gflops={gflops:.2f}")
+    gflops = 2 * 512**3 / (tm.us_per_call / 1e6) / 1e9
+    print(
+        f"kernel/r2f2_matmul_512,{tm.us_per_call:.0f},"
+        f"max_dev_vs_ref={dev:.2e};rel_vs_f32={rel:.5f};"
+        f"emul_gflops={gflops:.2f};compile_us={tm.compile_us:.0f}"
+    )
 
     u0 = (500 * np.sin(np.linspace(0, 3 * np.pi, 1024))[None] * np.ones((8, 1))).astype(np.float32)
-    us_h, hk = _time(ops.heat_stencil, u0, 1e-5, 4e4, fmt, steps=10)
+    th = measure(ops.heat_stencil, u0, 1e-5, 4e4, fmt, steps=10)
     hr = ref.heat_stencil_ref(u0, 1e-5, 4e4, fmt=fmt, steps=10)
-    hmatch = np.array_equal(np.asarray(hk), np.asarray(hr))
-    print(f"kernel/heat_stencil_8x1024x10,{us_h:.0f},bitexact_vs_ref={hmatch}")
+    hmatch = np.array_equal(np.asarray(th.result), np.asarray(hr))
+    print(
+        f"kernel/heat_stencil_8x1024x10,{th.us_per_call:.0f},"
+        f"bitexact_vs_ref={hmatch};compile_us={th.compile_us:.0f}"
+    )
 
     q3 = (500.0 + 100 * rng.normal(size=(128, 256))).astype(np.float32)
     q1 = (q3 * rng.normal(0, 5, (128, 256))).astype(np.float32)
-    us_s, fk = _time(ops.swe_flux, q1, q3, fmt)
+    ts = measure(ops.swe_flux, q1, q3, fmt)
     fr = ref.swe_flux_ref(q1, q3, fmt=fmt)
-    smatch = np.array_equal(np.asarray(fk), np.asarray(fr))
-    print(f"kernel/swe_flux_128x256,{us_s:.0f},bitexact_vs_ref={smatch}")
+    smatch = np.array_equal(np.asarray(ts.result), np.asarray(fr))
+    print(
+        f"kernel/swe_flux_128x256,{ts.us_per_call:.0f},"
+        f"bitexact_vs_ref={smatch};compile_us={ts.compile_us:.0f}"
+    )
 
 
 if __name__ == "__main__":

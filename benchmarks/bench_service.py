@@ -93,18 +93,22 @@ def main(smoke: bool = False) -> None:
     for stepper, prec, execution in cells:
         key = cell_keys[(stepper, prec, execution)]  # full key: formats never merge
         occ_mean, _ = m.occupancy(key)
-        n_chunks = sum(1 for k, _, _, _ in m.chunk_samples if k == key)
+        n_chunks = sum(1 for k, _, _, _, _ in m.chunk_samples if k == key)
+        n_compiles = sum(
+            1 for k, _, _, _, compiled in m.chunk_samples if k == key and compiled
+        )
         print(  # row name keeps the preset label (distinguishes formats)
             f"service/{stepper}/{prec}/{execution},{m.latency_us(50, key):.1f},"
             f"thr={m.throughput(key):.0f};p99={m.latency_us(99, key):.1f}us;"
-            f"occ={occ_mean:.2f};chunks={n_chunks}"
+            f"occ={occ_mean:.2f};chunks={n_chunks};compiles={n_compiles}"
         )
     occ_mean, occ_max = m.occupancy()
     print(
         f"service/_total/all/all,{m.latency_us(50):.1f},"
         f"thr={m.throughput():.0f};p99={m.latency_us(99):.1f}us;"
         f"occ={occ_mean:.2f}/max{occ_max};snapshots={m.snapshots_emitted};"
-        f"completed={m.completed}"
+        f"completed={m.completed};compiles={m.compiles};"
+        f"compile_s={m.compile_seconds:.2f}"
     )
 
 

@@ -18,6 +18,14 @@ The production loop end to end (DESIGN.md §11 + §12):
    the final state against the f32 request served in the same burst; then
    the service metrics surface (throughput, p50/p99 chunk latency, bucket
    occupancy, fleet-level §5.3 adjust counters).
+
+With ``--trace [DIR]`` (default ``artifacts/obs``) the burst runs under
+``repro.obs``: the whole pipeline is spanned (request lifecycle, chunk
+calls, pallas dispatches), and on exit the Chrome trace, Prometheus text
+metrics and per-site precision telemetry are exported to DIR. Open
+``DIR/trace.json`` at https://ui.perfetto.dev, or print the fleet view
+headlessly with ``python -m repro.obs --dir DIR``. Instrumentation is
+passive — the served numerics are bit-identical with or without it.
 """
 
 import argparse
@@ -48,8 +56,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--smoke", action="store_true", help="reduced steps")
+    ap.add_argument("--trace", nargs="?", const="artifacts/obs", default=None,
+                    metavar="DIR",
+                    help="enable repro.obs and export trace/metrics/telemetry "
+                         "artifacts to DIR (default: artifacts/obs)")
     args = ap.parse_args()
     steps = 64 if args.smoke else args.steps
+
+    import repro.obs as obs
+
+    if args.trace:
+        obs.enable(sample=1.0)
 
     # -- 1. autotune one policy artifact per workload -----------------------
     policies = {}
@@ -107,6 +124,15 @@ def main():
 
     print()
     print(svc.metrics.report())
+
+    if args.trace:
+        paths = obs.export(args.trace)
+        print("\n[obs] artifacts exported:")
+        for kind, path in sorted(paths.items()):
+            print(f"  {kind:12s} {path}")
+        print("  open the trace at https://ui.perfetto.dev, or run "
+              f"`python -m repro.obs --dir {args.trace}`")
+        obs.disable()
 
 
 if __name__ == "__main__":

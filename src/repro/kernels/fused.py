@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.obs as _obs
 from repro.core.flexformat import quantize_em
 from repro.kernels.blockops import (
     block_max_exp,
@@ -522,7 +523,7 @@ def fused_sweep(
         )
         out_shape.append(jax.ShapeDtypeStruct((gi, gj, n_sites, 2, nb), jnp.int32))
 
-    outs = pl.pallas_call(
+    call = pl.pallas_call(
         functools.partial(
             _sweep_kernel,
             body=body,
@@ -543,7 +544,14 @@ def fused_sweep(
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(*inputs)
+    )
+    with _obs.span("pallas.fused_sweep", steps=steps, grid=f"{gi}x{gj}"):
+        _obs.inc(
+            "repro_pallas_dispatch_total",
+            help="pallas_call dispatch sites entered",
+            kernel="fused_sweep",
+        )
+        outs = call(*inputs)
 
     outs = list(outs)
     counts = None

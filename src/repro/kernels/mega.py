@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.obs as _obs
+
 from repro.core.flexformat import quantize_em
 from repro.core.policy import RangeTracker, adjust_step
 from repro.kernels.fused import FusedOps, resolve_interpret
@@ -391,7 +393,7 @@ def mega_sweep(
         if n_out > 0:
             out_shape.append(jax.ShapeDtypeStruct((n_out, n_sites, 2, nb), jnp.int32))
 
-    outs = list(
+    call = (
         pl.pallas_call(
             functools.partial(
                 _mega_kernel,
@@ -412,8 +414,15 @@ def mega_sweep(
             ),
             out_shape=tuple(out_shape),
             interpret=interpret,
-        )(*inputs)
+        )
     )
+    with _obs.span("pallas.mega_sweep", steps=steps, every=every):
+        _obs.inc(
+            "repro_pallas_dispatch_total",
+            help="pallas_call dispatch sites entered",
+            kernel="mega_sweep",
+        )
+        outs = list(call(*inputs))
 
     # ---- unpack the flat output list -------------------------------------
     time_cnt = outs.pop() if (capture is not None and n_out > 0) else None

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.obs as _obs
 from repro.core.flexformat import quantize_em, unbiased_exponent
 from repro.core.r2f2 import product_guard_bits, select_k
 
@@ -103,7 +104,7 @@ def r2f2_matmul_pallas(
     mp, np_, kp = m + pm, n + pn, kdim + pk
 
     grid = (mp // bm, np_ // bn, kp // bk)
-    out = pl.pallas_call(
+    call = pl.pallas_call(
         functools.partial(
             _matmul_kernel,
             fmt=fmt,
@@ -118,5 +119,12 @@ def r2f2_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(a, b)
+    )
+    with _obs.span("pallas.r2f2_matmul", m=m, n=n, k=kdim):
+        _obs.inc(
+            "repro_pallas_dispatch_total",
+            help="pallas_call dispatch sites entered",
+            kernel="r2f2_matmul",
+        )
+        out = call(a, b)
     return out[:m, :n] if (pm or pn) else out

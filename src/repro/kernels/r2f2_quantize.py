@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.obs as _obs
 from repro.core.flexformat import quantize_em, unbiased_exponent
 from repro.core.r2f2 import select_k_operand
 
@@ -49,7 +50,7 @@ def r2f2_quantize_pallas(x, *, fmt, block=DEFAULT_BLOCK, interpret=True):
     if m % bm or n % bn:
         raise ValueError(f"shape {x.shape} not divisible by block ({bm},{bn})")
     grid = (m // bm, n // bn)
-    y, k = pl.pallas_call(
+    call = pl.pallas_call(
         functools.partial(_quantize_kernel, fmt=fmt),
         grid=grid,
         in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
@@ -62,5 +63,12 @@ def r2f2_quantize_pallas(x, *, fmt, block=DEFAULT_BLOCK, interpret=True):
             jax.ShapeDtypeStruct(grid, jnp.int32),
         ],
         interpret=interpret,
-    )(x.astype(jnp.float32))
+    )
+    with _obs.span("pallas.r2f2_quantize", m=m, n=n):
+        _obs.inc(
+            "repro_pallas_dispatch_total",
+            help="pallas_call dispatch sites entered",
+            kernel="r2f2_quantize",
+        )
+        y, k = call(x.astype(jnp.float32))
     return y, k

@@ -1,0 +1,260 @@
+"""``python -m repro.obs`` — headless fleet reporter over exported artifacts.
+
+Default mode loads a directory of artifacts written by
+:func:`repro.obs.export` (``trace.json``, ``metrics.prom``,
+``telemetry.json``) and prints the fleet view: top-k slow spans, per-bucket
+chunk latency, per-site carried-k trajectories. It needs only stdlib +
+numpy — point it at artifacts scp'd off a serving host.
+
+``--smoke`` is the CI gate: serve a tiny mixed burst in-process with
+observability enabled, export, reload the artifacts through the strict
+loaders, and verify the whole contract — trace loads with complete spans,
+the Prometheus text round-trips through the strict parser, telemetry's
+final carried k matches the request results, and the recorder's measured
+self-time stays under the 5% overhead budget. Exit 0 on pass, 2 on any
+failure (printed with a ``SMOKE FAIL`` prefix).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+OVERHEAD_BUDGET = 0.05  # recorder self-time / device-busy time
+
+
+# ---------------------------------------------------------------------------
+# report mode
+# ---------------------------------------------------------------------------
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.0f}us"
+
+
+def report_trace(path: str, top: int = 10) -> List[str]:
+    from .trace import load_trace
+
+    doc = load_trace(path)
+    events = doc["traceEvents"]
+    complete = [e for e in events if e.get("ph") == "X"]
+    lines = [
+        f"trace: {len(complete)} spans, "
+        f"{len(events) - len(complete)} instants ({path})"
+    ]
+    slow = sorted(complete, key=lambda e: -e.get("dur", 0.0))[:top]
+    if slow:
+        lines.append(f"  top {len(slow)} slow spans:")
+        width = max(len(e["name"]) for e in slow)
+        for e in slow:
+            args = e.get("args", {})
+            brief = ", ".join(
+                f"{k}={v}" for k, v in sorted(args.items()) if k != "depth"
+            )
+            lines.append(
+                f"    {e['name']:<{width}}  {_fmt_us(e.get('dur', 0.0)):>9}"
+                + (f"  [{brief}]" if brief else "")
+            )
+    return lines
+
+
+def report_metrics(path: str) -> List[str]:
+    from .metrics import parse_prometheus
+
+    with open(path) as f:
+        families = parse_prometheus(f.read())
+    lines = [f"metrics: {len(families)} families ({path})"]
+    for name, fam in sorted(families.items()):
+        if fam["type"] == "histogram":
+            # per-label-set mean latency from _sum/_count
+            sums: Dict[Any, float] = {}
+            counts: Dict[Any, float] = {}
+            for sname, labels, value in fam["samples"]:
+                key = tuple(sorted(labels.items()))
+                if sname.endswith("_sum"):
+                    sums[key] = value
+                elif sname.endswith("_count"):
+                    counts[key] = value
+            lines.append(f"  {name} (histogram):")
+            for key in sorted(sums):
+                n = counts.get(key, 0.0)
+                mean = sums[key] / n if n else float("nan")
+                lbl = ", ".join(f"{k}={v}" for k, v in key) or "(no labels)"
+                lines.append(
+                    f"    {lbl}: n={n:.0f} mean={_fmt_us(mean * 1e6)}"
+                )
+        else:
+            for sname, labels, value in fam["samples"]:
+                lbl = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+                lines.append(
+                    f"  {sname}{{{lbl}}} = {value:g}" if lbl
+                    else f"  {sname} = {value:g}"
+                )
+    return lines
+
+
+def report_telemetry(path: str) -> List[str]:
+    from .precision import load_telemetry
+
+    tel = load_telemetry(path)
+    lines = [f"telemetry: {len(tel)} site series ({path})"]
+    for s in tel.all_series():
+        if not s.k:
+            continue
+        traj = "->".join(str(k) for k in _dedup(s.k))
+        cov = f" coverage={s.coverage:.3f}" if s.coverage is not None else ""
+        lines.append(
+            f"  {s.scope}:{s.site}  k {traj}  "
+            f"(grew {s.grew[-1]}, shrank {s.shrank[-1]}, "
+            f"{len(s.steps)} samples){cov}"
+        )
+    return lines
+
+
+def _dedup(ks: List[int]) -> List[int]:
+    out: List[int] = []
+    for k in ks:
+        if not out or out[-1] != k:
+            out.append(int(k))
+    return out
+
+
+def run_report(dir: str, top: int) -> int:
+    any_found = False
+    for fname, fn in (
+        ("trace.json", lambda p: report_trace(p, top)),
+        ("metrics.prom", report_metrics),
+        ("telemetry.json", report_telemetry),
+    ):
+        path = os.path.join(dir, fname)
+        if os.path.exists(path):
+            any_found = True
+            for line in fn(path):
+                print(line)
+        else:
+            print(f"({fname}: not found in {dir})")
+    if not any_found:
+        print(f"no obs artifacts in {dir!r} — run with repro.obs.export() first")
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# smoke mode (the CI gate)
+# ---------------------------------------------------------------------------
+
+def run_smoke(out_dir: str) -> int:
+    failures: List[str] = []
+
+    def check(ok: bool, what: str) -> None:
+        print(("  ok   " if ok else "  FAIL ") + what)
+        if not ok:
+            failures.append(what)
+
+    import numpy as np
+
+    import repro.obs as obs
+    from repro.service import SimRequest, SimService
+
+    print("smoke: serving a mixed burst with observability enabled")
+    obs.enable(sample=1.0)
+    try:
+        svc = SimService()
+        h_f32 = svc.submit(SimRequest("heat1d", steps=64, precision="f32",
+                                      snapshot_every=16))
+        h_trk = svc.submit(SimRequest("heat1d", steps=64,
+                                      precision="rr_tracked",
+                                      snapshot_every=16))
+        svc.run_until_idle()
+        res_trk = h_trk.result()
+        h_f32.result()
+        summary = svc.metrics.summary()
+        paths = obs.export(out_dir)
+        o = obs.active()
+        tracer_self = o.tracer.self_seconds if o.tracer else 0.0
+        n_spans = len(o.tracer.spans) if o.tracer else 0
+    finally:
+        obs.disable()
+
+    # 1. trace artifact loads and has complete spans
+    doc = obs.load_trace(paths["trace"])
+    complete = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    check(len(complete) >= 1, f"trace has complete spans ({len(complete)})")
+    check(any(e["name"] == "service.chunk" for e in complete),
+          "trace covers service.chunk spans")
+
+    # 2. Prometheus export round-trips through the strict parser
+    with open(paths["prometheus"]) as f:
+        prom_text = f.read()
+    try:
+        families = obs.parse_prometheus(prom_text)
+        check(len(families) >= 1, f"prometheus parses ({len(families)} families)")
+    except ValueError as e:
+        check(False, f"prometheus parses ({e})")
+        families = {}
+    check("repro_service_chunk_latency_seconds" in families,
+          "chunk-latency histogram exported")
+
+    # 3. compile/execute split landed in the metrics
+    check(summary.get("compiles", 0) >= 1,
+          f"compile calls recorded ({summary.get('compiles')})")
+    check(summary.get("compile_seconds", 0.0) > 0.0,
+          "compile_seconds > 0")
+    check(np.isfinite(summary.get("chunk_latency_p50_us", float("nan"))),
+          "execute-only latency percentile is finite")
+
+    # 4. telemetry: final carried k in the series matches the request result
+    tel = obs.load_telemetry(paths["telemetry"])
+    check(len(tel) >= 1, f"telemetry has site series ({len(tel)})")
+    ok_k = False
+    if res_trk.final_k:
+        for scope in tel.scopes():
+            if tel.final_k(scope) == res_trk.final_k:
+                ok_k = True
+                break
+    check(ok_k, f"telemetry final k matches request result {res_trk.final_k}")
+
+    # 5. measured recorder overhead under budget
+    busy = summary.get("busy_seconds", 0.0) + summary.get("compile_seconds", 0.0)
+    frac = tracer_self / busy if busy > 0 else 0.0
+    check(frac < OVERHEAD_BUDGET,
+          f"recorder self-time {frac * 100:.2f}% of busy time "
+          f"(budget {OVERHEAD_BUDGET * 100:.0f}%, {n_spans} spans)")
+
+    if failures:
+        print(f"SMOKE FAIL: {len(failures)} check(s) failed")
+        return 2
+    print(f"smoke passed; artifacts in {out_dir}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Fleet reporter over exported repro.obs artifacts.",
+    )
+    ap.add_argument("--dir", default="artifacts/obs",
+                    help="artifact directory to report on (default: %(default)s)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="how many slow spans to show (default: %(default)s)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve a tiny instrumented burst and gate the "
+                         "whole obs contract (CI mode; exit 2 on failure)")
+    ap.add_argument("--out", default=None,
+                    help="smoke-mode export directory (default: --dir)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run_smoke(args.out or args.dir)
+    return run_report(args.dir, args.top)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

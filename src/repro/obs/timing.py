@@ -1,0 +1,47 @@
+"""Shared bench timing with an explicit compile/execute split.
+
+Every benchmark in the repo used to time jitted callables with an ad-hoc
+``perf_counter`` pair around a warmup loop, which silently folds XLA trace
++ compile time into the first sample (or throws it away entirely without
+reporting it). :func:`measure` is the one helper they now share:
+
+* the **first call** is timed separately and reported as ``compile_us`` —
+  for a jitted callable this is trace + compile + one execution, the
+  figure the service plane's ``compile_seconds`` metric tracks;
+* the remaining ``iters`` calls are averaged into ``us_per_call`` — the
+  steady-state figure the bench baselines compare.
+
+Each call is fenced with ``jax.block_until_ready`` so device asynchrony
+cannot leak one sample into the next.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple
+
+__all__ = ["Timing", "measure"]
+
+
+class Timing(NamedTuple):
+    compile_us: float  # first call: trace + compile + execute
+    us_per_call: float  # steady-state mean over `iters` calls
+    iters: int
+    result: Any  # last call's (blocked-on) output
+
+
+def measure(fn, *args, iters: int = 3, **kw) -> Timing:
+    """Time ``fn(*args, **kw)``: one compile-inclusive first call, then the
+    mean of ``iters`` steady-state calls (see module docstring)."""
+    import jax
+
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kw))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    us = (time.perf_counter() - t0) * 1e6 / iters
+    return Timing(compile_us=compile_us, us_per_call=us, iters=iters, result=out)

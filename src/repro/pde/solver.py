@@ -49,6 +49,7 @@ from typing import Any, NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+import repro.obs as _obs
 from repro.core.policy import PrecisionConfig
 from repro.dist.sharding import constrain
 from repro.pack import is_packed, pack_state, storage_quantize, unpack_state
@@ -455,7 +456,55 @@ class Simulation:
         element — the result's ``state`` and any resumed carry are packed
         trees) and is bit-identical to ``"quantized"`` by construction:
         both apply exactly one pack per boundary to the same f32 values.
+
+        With :mod:`repro.obs` enabled the run is wrapped in a ``sim.run``
+        span and — for tracked modes — its final tracker (and, when the run
+        captured evidence, the full chunk-boundary k series replayed from
+        that evidence) is drained into the precision telemetry. All of it is
+        passive host-side observation: the numerics are bit-identical with
+        observability on or off (``tests/test_obs.py``).
         """
+        resolved = self._resolve_execution(execution)
+        with _obs.span(
+            "sim.run",
+            stepper=self.stepper.name,
+            mode=self.prec.mode,
+            steps=steps,
+            execution=resolved,
+            storage=storage,
+        ):
+            _obs.inc(
+                "repro_sim_runs_total",
+                help="Simulation.run calls by plane",
+                stepper=self.stepper.name,
+                mode=self.prec.mode,
+                execution=resolved,
+            )
+            res = self._run(
+                steps,
+                snapshot_every=snapshot_every,
+                state0=state0,
+                tracker=tracker,
+                execution=resolved,
+                capture=capture,
+                policy=policy,
+                storage=storage,
+            )
+        self._drain_telemetry(res, steps, snapshot_every, tracker, policy)
+        return res
+
+    def _run(
+        self,
+        steps: int,
+        *,
+        snapshot_every: Optional[int] = None,
+        state0=None,
+        tracker=None,
+        execution: str = "reference",
+        capture=None,
+        policy=None,
+        storage: str = "f32",
+    ) -> SimResult:
         stepper, cfg, prec = self.stepper, self.cfg, self.prec
         storage = self._resolve_storage(storage)
         if policy is not None:
@@ -524,6 +573,69 @@ class Simulation:
                 carry = (storage_quantize(carry[0], prec.fmt), carry[1])
         state, tracker = carry
         return SimResult(state, snaps, tracker)
+
+    # -- precision-telemetry drain (passive; repro.obs) ----------------------
+
+    def _drain_telemetry(self, res, steps, snapshot_every, tracker_arg, policy):
+        """Feed a finished run's tracker into ``repro.obs`` telemetry.
+
+        Passivity guard: if any tracker/evidence leaf is a jax tracer (this
+        run is being traced inside jit/vmap — e.g. the service's compiled
+        chunk programs) nothing is drained; the concrete values are observed
+        by whoever executes the compiled program (the batcher)."""
+        o = _obs.active()
+        if o is None or o.telemetry is None or res.tracker is None:
+            return
+        leaves = jax.tree_util.tree_leaves(
+            (res.tracker, None if res.profile is None else res.profile.evidence)
+        )
+        if any(isinstance(x, jax.core.Tracer) for x in leaves):
+            return
+        stepper = self.stepper
+        scope = o.telemetry.unique_scope(f"sim:{stepper.name}")
+        if res.profile is None:
+            o.telemetry.record_tracker(scope, res.tracker, steps)
+            return
+        # captured run: replay the evidence stream through the adjust law to
+        # reconstruct the k series at every chunk boundary, plus coverage of
+        # the final carried splits (repro.obs.precision — no new kernel
+        # outputs, the capture plane already emits this stream)
+        from repro.obs.precision import coverage_fraction, replay_k_series
+
+        prec, tr0 = self.prec, tracker_arg
+        if policy is not None:
+            prec, tr0 = self._apply_policy(prec, tr0, policy)
+        if tr0 is None:
+            tr0 = self.init_tracker()
+        every = snapshot_every or max(1, steps // stepper.snapshots_default)
+        sites = list(stepper.sites)
+        ops = stepper.site_ops or None
+        bsteps, k, grew, shrank = replay_k_series(
+            res.profile.evidence, prec, sites, site_ops=ops, every=every,
+            tracker0=tr0,
+        )
+        st = res.tracker.state
+        final_k = {n: int(st.k[i]) for i, n in enumerate(res.tracker.names)}
+        cov = coverage_fraction(
+            res.profile.evidence, prec, sites, final_k, site_ops=ops
+        )
+        o.telemetry.record_series(
+            scope, sites, bsteps, k, grew, shrank, coverage=cov
+        )
+
+    def _drain_ensemble_telemetry(self, res, steps):
+        """Per-member final-tracker drain after a concrete run_ensemble."""
+        o = _obs.active()
+        if o is None or o.telemetry is None or res.tracker is None:
+            return
+        leaves = jax.tree_util.tree_leaves(res.tracker)
+        if any(isinstance(x, jax.core.Tracer) for x in leaves):
+            return
+        base = o.telemetry.unique_scope(f"ens:{self.stepper.name}")
+        n_members = res.tracker.state.k.shape[0]
+        for i in range(n_members):
+            tr_i = jax.tree_util.tree_map(lambda x: x[i], res.tracker)
+            o.telemetry.record_tracker(f"{base}/m{i}", tr_i, steps)
 
     def _run_reference_captured(
         self, steps, every, n_out, rem, state0, tracker, prec, spec, storage="f32"
@@ -764,6 +876,41 @@ class Simulation:
         above carries packed members between service chunks without ever
         widening them to f32 in HBM.
         """
+        with _obs.span(
+            "sim.run_ensemble",
+            stepper=self.stepper.name,
+            mode=self.prec.mode,
+            steps=steps,
+            execution=execution,
+            sharded=bool(sharded),
+        ):
+            res = self._run_ensemble(
+                state0_batch,
+                steps,
+                snapshot_every=snapshot_every,
+                sharded=sharded,
+                execution=execution,
+                capture=capture,
+                policy=policy,
+                tracker0_batch=tracker0_batch,
+                storage=storage,
+            )
+        self._drain_ensemble_telemetry(res, steps)
+        return res
+
+    def _run_ensemble(
+        self,
+        state0_batch,
+        steps: int,
+        *,
+        snapshot_every: Optional[int] = None,
+        sharded: bool = False,
+        execution: str = "reference",
+        capture=None,
+        policy=None,
+        tracker0_batch=None,
+        storage: str = "f32",
+    ) -> SimResult:
         if sharded:
             state0_batch = _constrain_ensemble(state0_batch)
             if tracker0_batch is not None:

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.dist.sharding import active_mesh
 
 from .metrics import ServiceMetrics
@@ -85,10 +86,16 @@ class ChunkCompiler:
         self.maxsize = maxsize
         self._cache: "OrderedDict[Tuple, Callable]" = OrderedDict()
 
-    def get(self, sim, key: BucketKey, chunk: int, n: int, sharded: bool, mesh=None):
+    def get(
+        self, sim, key: BucketKey, chunk: int, n: int, sharded: bool, mesh=None
+    ) -> Tuple[Callable, bool]:
+        """Returns ``(chunk_fn, fresh)`` — ``fresh`` marks a cache miss, i.e.
+        the next call of ``chunk_fn`` will trace + compile. The batcher books
+        that call as compile time, not a chunk-latency sample."""
         cache_key = (key, chunk, n, sharded, mesh)
         fn = self._cache.get(cache_key)
-        if fn is None:
+        fresh = fn is None
+        if fresh:
 
             def chunk_fn(state_b, tracker_b):
                 res = sim.run_ensemble(
@@ -107,7 +114,7 @@ class ChunkCompiler:
                 self._cache.popitem(last=False)
         else:
             self._cache.move_to_end(cache_key)
-        return fn
+        return fn, fresh
 
     def __len__(self) -> int:
         return len(self._cache)
@@ -131,6 +138,7 @@ class Bucket:
             )
         self.members.append(rec)
         rec.status = "running"
+        obs.instant("request.join", request=rec.id, bucket=self.key.short())
 
     def next_chunk(self) -> int:
         """Steps until the earliest member event — the next chunk's length."""
@@ -164,21 +172,31 @@ class Bucket:
             tree_stack([m.tracker for m in self.members]) if tracked else None
         )
 
-        fn = compiler.get(
+        fn, fresh = compiler.get(
             sim, self.key, chunk, n, sharded, mesh=mesh if sharded else None
         )
-        t0 = time.perf_counter()
-        out_state, out_snaps, out_tracker = jax.block_until_ready(
-            fn(state_b, tracker_b)
-        )
-        dt = time.perf_counter() - t0
-        metrics.observe_chunk(self.key, n, chunk, dt)
+        with obs.span(
+            "service.chunk",
+            bucket=self.key.short(),
+            members=n,
+            steps=chunk,
+            compile=fresh,
+        ):
+            t0 = time.perf_counter()
+            out_state, out_snaps, out_tracker = jax.block_until_ready(
+                fn(state_b, tracker_b)
+            )
+            dt = time.perf_counter() - t0
+        metrics.observe_chunk(self.key, n, chunk, dt, compiled=fresh)
 
         drained: List[RequestRecord] = []
         for i, m in enumerate(self.members):
             m.state = tree_slice(out_state, i)
             if tracked:
                 m.tracker = tree_slice(out_tracker, i)
+                obs.record_tracker(
+                    f"req{m.id}:{m.key.stepper}", m.tracker, m.elapsed + chunk
+                )
             m.elapsed += chunk
             m.chunks += 1
             if m.snapshot_due():
@@ -212,4 +230,7 @@ class Bucket:
             chunks=m.chunks,
         )
         m.stream.emit("done", m.elapsed, m.result)
+        obs.instant(
+            "request.done", request=m.id, steps=m.elapsed, chunks=m.chunks
+        )
         metrics.observe_completion(adjustments)

@@ -42,6 +42,7 @@ from typing import Deque, Dict, List, Optional
 
 import jax
 
+import repro.obs as obs
 from repro.ckpt import checkpoint as ckpt
 
 from .batcher import Bucket, ChunkCompiler
@@ -115,6 +116,13 @@ class SimService:
         self._queue.append(rec)
         self._requests[rec.id] = rec
         self.metrics.submitted += 1
+        obs.instant(
+            "request.submit",
+            request=rec.id,
+            stepper=rec.key.stepper,
+            mode=rec.key.prec.mode,
+            steps=rec.steps,
+        )
         return RequestHandle(rec)
 
     def handle(self, request_id: int) -> RequestHandle:
@@ -124,29 +132,33 @@ class SimService:
         """One scheduling iteration: fill buckets, advance ONE bucket by one
         chunk, fill again (joins/drains happen at the boundary). Returns
         False when there is nothing left to do."""
-        self._fill()
-        buckets = self._live_buckets()
-        if not buckets:
-            return False
-        bucket = buckets[self._rr % len(buckets)]
-        self._rr += 1
-        try:
-            drained = bucket.advance(
-                self._compiler, self.metrics, sharded=self.config.sharded
-            )
-        except Exception as e:  # compile/runtime failure: fail the members
-            for m in list(bucket.members):
-                bucket.members.remove(m)
-                m.status = "failed"
-                m.error = repr(e)
-                m.stream.emit("failed", m.elapsed, repr(e))
-                self.metrics.failed += 1
+        with obs.span("service.pump") as sp:
+            self._fill()
+            buckets = self._live_buckets()
+            if not buckets:
+                return False
+            bucket = buckets[self._rr % len(buckets)]
+            self._rr += 1
+            if sp is not None:
+                sp["bucket"] = bucket.key.short()
+                sp["members"] = len(bucket)
+            try:
+                drained = bucket.advance(
+                    self._compiler, self.metrics, sharded=self.config.sharded
+                )
+            except Exception as e:  # compile/runtime failure: fail the members
+                for m in list(bucket.members):
+                    bucket.members.remove(m)
+                    m.status = "failed"
+                    m.error = repr(e)
+                    m.stream.emit("failed", m.elapsed, repr(e))
+                    self.metrics.failed += 1
+                    self._retire(m)
+                raise
+            for m in drained:
                 self._retire(m)
-            raise
-        for m in drained:
-            self._retire(m)
-        self._gc_buckets()
-        self._fill()
+            self._gc_buckets()
+            self._fill()
         return True
 
     def _retire(self, rec: RequestRecord) -> None:
@@ -266,6 +278,7 @@ class SimService:
         rec.status = "evicted"
         self._evicted.append(rec)
         rec.stream.emit("evicted", rec.elapsed, rec.ckpt_dir)
+        obs.instant("request.evict", request=rec.id, step=rec.elapsed)
         self.metrics.evicted += 1
         return rec.ckpt_dir
 
@@ -286,5 +299,6 @@ class SimService:
         self._evicted.remove(rec)
         self._queue.append(rec)
         rec.stream.emit("resumed", rec.elapsed)
+        obs.instant("request.resume", request=rec.id, step=rec.elapsed)
         self.metrics.resumed += 1
         return RequestHandle(rec)
