@@ -5,11 +5,20 @@ For each (stepper, precision, execution) cell, submit a burst of
 drive it to idle, and report per-bucket serving statistics from the
 service's own metrics surface:
 
-    service/<stepper>/<prec>/<exec>,p50_chunk_us,thr=<member-steps/s>;p99=<us>;occ=<mean>;chunks=<n>
+    service/<stepper>/<prec>/<exec>,p50_chunk_us,thr=<member-steps/s>;p99=<us>;occ=<mean>;chunks=<n>;err_budget=<rel-L2>;alerts=<n>
 
 plus one aggregate row with overall throughput and bucket occupancy:
 
-    service/_total/all/all,p50_chunk_us,thr=..;p99=..;occ=../max=..;snapshots=..
+    service/_total/all/all,p50_chunk_us,thr=..;p99=..;occ=../max=..;snapshots=..;alerts=..;shadow_s=..
+
+The whole burst runs under the :mod:`repro.obs.health` monitor:
+``err_budget`` is the cell's worst shadow-replay rel-L2 vs the f32 oracle
+(``nan`` when the deterministic sampler picked none of the cell's
+requests), ``alerts`` counts health alerts attributed to the cell's
+requests plus — on the aggregate row — fleet-scoped alerts, and
+``shadow_s`` is the measured shadow-replay overhead (host-side, off the
+chunk critical path). A healthy bench burst has ``alerts=0`` everywhere;
+``benchmarks/run.py --check`` hard-fails otherwise.
 
 The warm half of the burst dominates (compiled-chunk cache hits); the cold
 tracing cost is real serving behaviour and stays in the numbers — this
@@ -22,7 +31,11 @@ horizons for the CI fast tier; rows are captured by ``benchmarks.run`` into
 from __future__ import annotations
 
 import argparse
+import math
+import re
 
+import repro.obs as obs
+import repro.obs.health as health
 from repro.service import ServiceConfig, SimRequest, SimService, scaled_state0
 
 #: benchmarked cells: (stepper, precision, execution)
@@ -58,57 +71,89 @@ def _overrides(stepper: str, smoke: bool):
     }.get(stepper)
 
 
+SHADOW_RATE = 0.5  # deterministic sampler: every other request replays at f32
+
+
 def main(smoke: bool = False) -> None:
     cells = SMOKE_CELLS if smoke else CELLS
     steps = 48 if smoke else 240
     every = 12 if smoke else 30
 
-    svc = SimService(ServiceConfig(max_queue=1024, max_bucket=MEMBERS))
-    handles = []
-    cell_keys = {}  # (stepper, prec, execution) -> full BucketKey (metrics key)
-    for stepper, prec, execution in cells:
-        ov = _overrides(stepper, smoke)
-        for i in range(MEMBERS):
-            h = svc.submit(
-                SimRequest(
-                    stepper,
-                    steps=steps,
-                    precision=prec,
-                    overrides=ov,
-                    snapshot_every=every,
-                    execution=execution,
-                    state0=scaled_state0(stepper, 0.6 + 0.15 * i, overrides=ov),
-                    tag=f"{stepper}/{prec}/{execution}",
+    had_obs = obs.enabled()
+    if not had_obs:
+        obs.enable(sample=0.0)  # registry only; no span recording in a bench
+    monitor = health.enable(shadow_rate=SHADOW_RATE)
+
+    try:
+        svc = SimService(ServiceConfig(max_queue=1024, max_bucket=MEMBERS))
+        handles = []
+        cell_keys = {}  # (stepper, prec, exec) -> full BucketKey (metrics key)
+        cell_ids = {}  # (stepper, prec, exec) -> request ids (health key)
+        for stepper, prec, execution in cells:
+            ov = _overrides(stepper, smoke)
+            for i in range(MEMBERS):
+                h = svc.submit(
+                    SimRequest(
+                        stepper,
+                        steps=steps,
+                        precision=prec,
+                        overrides=ov,
+                        snapshot_every=every,
+                        execution=execution,
+                        state0=scaled_state0(stepper, 0.6 + 0.15 * i, overrides=ov),
+                        tag=f"{stepper}/{prec}/{execution}",
+                    )
                 )
-            )
-            handles.append(h)
-            cell_keys[(stepper, prec, execution)] = h.bucket_key
-    svc.run_until_idle()
+                handles.append(h)
+                cell_keys[(stepper, prec, execution)] = h.bucket_key
+                cell_ids.setdefault((stepper, prec, execution), []).append(h.id)
+        svc.run_until_idle()
+    finally:
+        health.disable()
+        if not had_obs:
+            obs.disable()
 
     m = svc.metrics
     incomplete = [h.tag for h in handles if h.status != "done"]
     if incomplete:
         raise RuntimeError(f"service bench left requests unfinished: {incomplete}")
 
+    # health attribution: alert -> request id (scopes are "req<id>:<stepper>";
+    # fleet-scoped alerts, e.g. SLO breaches, only count on the aggregate row)
+    alert_ids = []
+    for a in monitor.alerts:
+        match = re.match(r"req(\d+):", a.scope)
+        alert_ids.append(int(match.group(1)) if match else None)
+
     for stepper, prec, execution in cells:
         key = cell_keys[(stepper, prec, execution)]  # full key: formats never merge
+        ids = cell_ids[(stepper, prec, execution)]
         occ_mean, _ = m.occupancy(key)
         n_chunks = sum(1 for k, _, _, _, _ in m.chunk_samples if k == key)
         n_compiles = sum(
             1 for k, _, _, _, compiled in m.chunk_samples if k == key and compiled
         )
+        rels = [monitor.shadow_rel[i] for i in ids if i in monitor.shadow_rel]
+        err = max(rels) if rels else math.nan  # worst shadowed drift in the cell
+        n_alerts = sum(1 for i in alert_ids if i in ids)
         print(  # row name keeps the preset label (distinguishes formats)
             f"service/{stepper}/{prec}/{execution},{m.latency_us(50, key):.1f},"
             f"thr={m.throughput(key):.0f};p99={m.latency_us(99, key):.1f}us;"
-            f"occ={occ_mean:.2f};chunks={n_chunks};compiles={n_compiles}"
+            f"occ={occ_mean:.2f};chunks={n_chunks};compiles={n_compiles};"
+            f"err_budget={err:.3e};alerts={n_alerts}"
         )
     occ_mean, occ_max = m.occupancy()
+    shadow_s = monitor.obs.registry.counter(
+        "repro_health_shadow_seconds_total"
+    ).total()
     print(
         f"service/_total/all/all,{m.latency_us(50):.1f},"
         f"thr={m.throughput():.0f};p99={m.latency_us(99):.1f}us;"
         f"occ={occ_mean:.2f}/max{occ_max};snapshots={m.snapshots_emitted};"
         f"completed={m.completed};compiles={m.compiles};"
-        f"compile_s={m.compile_seconds:.2f}"
+        f"compile_s={m.compile_seconds:.2f};"
+        f"alerts={len(monitor.alerts)};shadowed={len(monitor.shadow_rel)};"
+        f"shadow_s={shadow_s:.2f}"
     )
 
 

@@ -24,7 +24,10 @@ baseline BEFORE the suites overwrite them, and every fresh row is compared
 against the baseline row of the same name. Structural metrics regressing is
 a hard failure (nonzero exit): ``bytes_per_step`` (the packed plane's
 bandwidth claim) and ``launches`` (the megakernel's whole-horizon claim)
-must not grow. Wall time is noisy, so ``us_per_call`` beyond ``--check-tol``
+must not grow, and a nonzero health ``alerts`` count on a service row is
+a hard failure too — the bench burst is healthy traffic, so an alert
+firing during it means a numerics or serving regression. Wall time is
+noisy, so ``us_per_call`` beyond ``--check-tol``
 x the baseline only warns (and only when the fresh and baseline smoke tiers
 match); a measured time BELOW the row's own analytic bandwidth bound
 (``bytes_per_step / HBM_BW``) also warns — that is measurement error, not
@@ -134,7 +137,11 @@ def check_records(fresh: dict, baselines: dict, tol: float = 10.0):
     """Compare fresh suite records against the committed baselines.
 
     Returns ``(failures, warnings)`` — string lists. Failures: a
-    :data:`CHECK_STRUCTURAL` metric grew on a row present in both. Warnings:
+    :data:`CHECK_STRUCTURAL` metric grew on a row present in both, or a
+    service row reporting a nonzero health ``alerts`` count — the bench
+    burst is healthy traffic, so any alert (overflow storm, k-thrash,
+    SLO breach) firing during it is a real numerics/serving regression,
+    baseline or not. Warnings:
     ``us_per_call`` beyond ``tol`` x baseline on matching smoke tiers, or a
     measured time below the row's own analytic bandwidth bound
     (``bytes_per_step`` at :data:`benchmarks.roofline.HBM_BW` — beating the
@@ -150,6 +157,17 @@ def check_records(fresh: dict, baselines: dict, tol: float = 10.0):
         )
         for row in rec.get("rows", []):
             d = _parse_derived(row.get("derived", ""))
+            # health gate: alerts during the bench burst are a hard failure
+            # with or without a baseline (the burst itself is healthy traffic)
+            try:
+                n_alerts = int(d.get("alerts", 0))
+            except ValueError:
+                n_alerts = 0
+            if n_alerts > 0:
+                failures.append(
+                    f"{row['name']}: {n_alerts} health alert(s) fired in the "
+                    "bench burst (expected a clean run)"
+                )
             b = base_rows.get(row["name"])
             if b is not None:
                 bd = _parse_derived(b.get("derived", ""))

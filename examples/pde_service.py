@@ -26,6 +26,18 @@ metrics and per-site precision telemetry are exported to DIR. Open
 ``DIR/trace.json`` at https://ui.perfetto.dev, or print the fleet view
 headlessly with ``python -m repro.obs --dir DIR``. Instrumentation is
 passive — the served numerics are bit-identical with or without it.
+
+With ``--health`` the burst additionally runs under the
+:mod:`repro.obs.health` monitor (DESIGN.md §16): a deterministic shadow
+sampler replays a fraction of requests at f32 and books the rel-L2 drift
+into the error-budget metric, anomaly detectors watch the precision
+telemetry, and SLO rules watch the service metrics. After the healthy
+burst the demo **deploys a stale artifact** — an advection1d policy
+pinned at the starved split k=0 — against hot traffic (pulse amplitude
+~1e5) whose dynamic range the artifact no longer matches: the quantised
+states overflow, the ``overflow_storm`` detector fires, a flight-recorder
+dump lands in ``artifacts/flightrec/`` for postmortem, and the process
+exits nonzero (the headless alerting contract: an alert is an alarm).
 """
 
 import argparse
@@ -60,13 +72,23 @@ def main():
                     metavar="DIR",
                     help="enable repro.obs and export trace/metrics/telemetry "
                          "artifacts to DIR (default: artifacts/obs)")
+    ap.add_argument("--health", action="store_true",
+                    help="run under the repro.obs.health monitor (shadow-"
+                         "oracle sampling + detectors + SLOs), then deploy a "
+                         "starved pinned advection1d policy and watch the "
+                         "overflow-storm alert fire (exits nonzero: the "
+                         "alarm working)")
     args = ap.parse_args()
     steps = 64 if args.smoke else args.steps
 
     import repro.obs as obs
+    import repro.obs.health as health
 
-    if args.trace:
+    monitor = None
+    if args.trace or args.health:
         obs.enable(sample=1.0)
+    if args.health:
+        monitor = health.enable(shadow_rate=0.5)
 
     # -- 1. autotune one policy artifact per workload -----------------------
     policies = {}
@@ -125,6 +147,47 @@ def main():
     print()
     print(svc.metrics.report())
 
+    # -- 4. (--health) the bad deploy: a starved pinned policy vs hot traffic
+    alerted = False
+    if monitor is not None:
+        from repro.pde.advection1d import AdvectionConfig  # noqa: E402
+        from repro.profile.artifact import PrecisionPolicy  # noqa: E402
+
+        print("\n[health] clean burst verdict:")
+        v = monitor.verdict()
+        print(f"  status {v['status']}, {v['alerts']['total']} alert(s), "
+              f"shadow sampled {v['shadow']['sampled']} "
+              f"(error-budget burn {v['shadow']['burn']})")
+
+        print("[health] deploying a STALE artifact: advection1d pinned at "
+              "the starved split k=0, traffic amplitude ~1e5 ...")
+        stale = PrecisionPolicy(
+            stepper="advection1d",
+            fmt=PRESETS["r2f2_16"].fmt,
+            sites={s: {"k": 0, "k_lo": 0, "k_hi": 0}
+                   for s in get_stepper("advection1d").sites},
+            validation={"accepted": True, "note": "stale artifact (demo)"},
+        )
+        hot_cfg = AdvectionConfig(nx=64, amplitude=1.0)
+        pinned_trk = dataclasses.replace(TRACKED, pinned=True)
+        for m in range(3):
+            svc.submit(SimRequest(
+                "advection1d", steps=32, precision=pinned_trk, cfg=hot_cfg,
+                policy=stale, snapshot_every=8,
+                tag=f"advection1d/stale-pinned#{m}",
+                state0=scaled_state0(
+                    "advection1d", scale=(1.0 + 0.1 * m) * 1e5,
+                    overrides={"nx": 64, "amplitude": 1.0},
+                ),
+            ))
+        svc.run_until_idle()
+        alerted = bool(monitor.alerts)
+        print(f"[health] {len(monitor.alerts)} alert(s) after the bad deploy:")
+        for a in monitor.alerts:
+            print(f"  ALERT {a}")
+        for p in monitor.dump_paths:
+            print(f"  flight dump: {p}")
+
     if args.trace:
         paths = obs.export(args.trace)
         print("\n[obs] artifacts exported:")
@@ -132,8 +195,16 @@ def main():
             print(f"  {kind:12s} {path}")
         print("  open the trace at https://ui.perfetto.dev, or run "
               f"`python -m repro.obs --dir {args.trace}`")
+
+    if monitor is not None:
+        health.disable()
+    if obs.enabled():
         obs.disable()
+    if alerted:
+        print("\n[health] alert(s) fired — exiting nonzero (the alarm working)")
+        return 3
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

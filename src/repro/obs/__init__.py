@@ -11,8 +11,15 @@ One subsystem the whole stack reports into (DESIGN.md §15):
   trackers at chunk boundaries.
 * :mod:`repro.obs.timing` — the shared bench helper with an explicit
   compile/execute split.
+* :mod:`repro.obs.health` — the live monitoring plane over this substrate
+  (DESIGN.md §16): anomaly detectors on the telemetry stream, shadow-
+  oracle sampling (:mod:`repro.obs.shadow`), declarative SLO rules, a
+  bounded flight recorder (:mod:`repro.obs.flightrec`) and a stdlib-HTTP
+  scrape endpoint (:mod:`repro.obs.server`).
 * ``python -m repro.obs`` — headless fleet reporter over exported
-  artifacts, plus the ``--smoke`` self-check CI gates on.
+  artifacts, plus the ``--smoke`` self-check CI gates on; ``python -m
+  repro.obs.health`` is the health-plane counterpart (offline detector
+  replay, ``--watch``, and its own ``--smoke`` gate).
 
 The passivity contract
 ----------------------

@@ -44,10 +44,17 @@ def report_trace(path: str, top: int = 10) -> List[str]:
     doc = load_trace(path)
     events = doc["traceEvents"]
     complete = [e for e in events if e.get("ph") == "X"]
+    dropped = doc.get("otherData", {}).get("dropped", 0)
     lines = [
         f"trace: {len(complete)} spans, "
-        f"{len(events) - len(complete)} instants ({path})"
+        f"{len(events) - len(complete)} instants, "
+        f"{dropped} dropped past capacity ({path})"
     ]
+    if dropped:
+        lines.append(
+            f"  WARNING: {dropped} sampled event(s) fell past the recorder "
+            "capacity — raise capacity or lower sample for complete traces"
+        )
     slow = sorted(complete, key=lambda e: -e.get("dur", 0.0))[:top]
     if slow:
         lines.append(f"  top {len(slow)} slow spans:")
@@ -126,6 +133,9 @@ def _dedup(ks: List[int]) -> List[int]:
 
 
 def run_report(dir: str, top: int) -> int:
+    """Report every artifact that is present and loadable; a missing or
+    malformed file (a partial export, a truncated write) degrades to a
+    warning line instead of crashing the whole report."""
     any_found = False
     for fname, fn in (
         ("trace.json", lambda p: report_trace(p, top)),
@@ -133,12 +143,17 @@ def run_report(dir: str, top: int) -> int:
         ("telemetry.json", report_telemetry),
     ):
         path = os.path.join(dir, fname)
-        if os.path.exists(path):
-            any_found = True
-            for line in fn(path):
-                print(line)
-        else:
+        if not os.path.exists(path):
             print(f"({fname}: not found in {dir})")
+            continue
+        try:
+            lines = fn(path)
+        except Exception as e:  # partial/corrupt artifact: report and move on
+            print(f"({fname}: unreadable — {e})")
+            continue
+        any_found = True
+        for line in lines:
+            print(line)
     if not any_found:
         print(f"no obs artifacts in {dir!r} — run with repro.obs.export() first")
         return 1

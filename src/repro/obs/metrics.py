@@ -44,6 +44,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "histogram_quantile",
     "parse_prometheus",
     "DEFAULT_BUCKETS",
 ]
@@ -177,6 +178,37 @@ class _HistCell:
         self.count = 0
 
 
+def histogram_quantile(q: float, buckets, count: float) -> float:
+    """Prometheus-style quantile estimate from cumulative ``le`` buckets.
+
+    ``buckets`` is a sequence of ``(le, cumulative_count)`` pairs over the
+    *finite* bucket bounds, ascending (exactly what
+    :meth:`Histogram.snapshot` returns); ``count`` is the total observation
+    count (the implicit ``+Inf`` bucket). Estimation is linear interpolation
+    inside the bucket holding rank ``q * count``, with 0 as the lower bound
+    of the first bucket; a rank past the last finite bucket returns that
+    bucket's bound (the standard `histogram_quantile` convention — the
+    estimate never invents mass above the largest finite bound). Returns
+    NaN with no observations or a ``q`` outside ``[0, 1]``.
+    """
+    count = float(count)
+    if not (0.0 <= q <= 1.0) or count <= 0 or not buckets:
+        return float("nan")
+    rank = q * count
+    lower = 0.0
+    prev_cum = 0.0
+    for le, cum in buckets:
+        if cum >= rank:
+            width = float(le) - lower
+            in_bucket = cum - prev_cum
+            if in_bucket <= 0 or width <= 0:
+                return float(le)
+            return lower + width * (rank - prev_cum) / in_bucket
+        lower = float(le)
+        prev_cum = float(cum)
+    return float(buckets[-1][0])
+
+
 class Histogram(_Metric):
     kind = "histogram"
 
@@ -213,6 +245,30 @@ class Histogram(_Metric):
             cum.append(acc)
         return {"buckets": list(zip(self.buckets, cum[:-1])), "sum": cell.sum,
                 "count": cell.count}
+
+    def quantile(self, q: float, **labels) -> float:
+        """Bucket-estimated quantile (seconds for latency histograms) of one
+        label set — or, with no labels, of the distribution aggregated over
+        every label set (all series share this histogram's bucket layout, so
+        cumulative counts sum exactly). NaN with no observations."""
+        if labels:
+            snap = self.snapshot(**labels)
+            if snap is None:
+                return float("nan")
+            return histogram_quantile(q, snap["buckets"], snap["count"])
+        with self._lock:
+            cells = list(self._series.values())
+        counts = [0] * (len(self.buckets) + 1)
+        total = 0
+        for cell in cells:
+            for i, c in enumerate(cell.counts):
+                counts[i] += c
+            total += cell.count
+        cum, acc = [], 0
+        for c in counts[:-1]:
+            acc += c
+            cum.append(acc)
+        return histogram_quantile(q, list(zip(self.buckets, cum)), total)
 
     def samples(self):
         out = []

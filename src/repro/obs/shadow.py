@@ -1,0 +1,135 @@
+"""Shadow-oracle sampling: replay a deterministic slice of traffic at f32.
+
+Siklósi et al. (arXiv 2505.20911) document the failure mode this exists
+for: reduced-precision runs that stay plausible while drifting from the
+full-precision answer. The only way to *see* that drift live is to pay for
+a full-precision replay of some traffic — so the health plane samples a
+deterministic low-rate subset of completed service requests, reruns each
+one at f32 through :meth:`repro.pde.solver.Simulation.oracle_replay`, and
+books the relative L2 distance between the served final state and the
+oracle's into the error-budget metrics.
+
+Passivity: the sampler decides at admission from the *submission count*
+alone (the same ``floor((n+1)r) > floor(nr)`` law the tracer uses — no
+RNG, no wall clock), the job captures host-side **copies** of the request's
+initial state, and the replay is a separate f32 program that shares nothing
+with the primary run. The primary path is bit-identical with shadowing on
+or off (``tests/test_health.py``).
+
+Module-level imports are numpy-only; jax and the solver load lazily inside
+:meth:`ShadowJob.replay`, so importing the health plane costs nothing on a
+host that only ever reads artifacts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+__all__ = ["ShadowSampler", "ShadowJob", "rel_l2", "nonfinite_fraction"]
+
+
+def rel_l2(state, oracle_state, offset: float = 0.0) -> float:
+    """Relative L2 distance between two state pytrees, after removing the
+    stepper's additive baseline (``Stepper.metric_offset`` — e.g. the SWE
+    resting depth, so drift is measured on the dynamic field). Any
+    non-finite value in either tree makes the distance ``inf`` — an
+    overflowed primary is *maximally* wrong, not NaN-silently fine."""
+    import jax
+
+    a = np.concatenate(
+        [np.ravel(np.asarray(x, np.float64)) - offset
+         for x in jax.tree_util.tree_leaves(state)]
+    )
+    b = np.concatenate(
+        [np.ravel(np.asarray(x, np.float64)) - offset
+         for x in jax.tree_util.tree_leaves(oracle_state)]
+    )
+    if a.shape != b.shape:
+        raise ValueError(f"state shapes differ: {a.shape} vs {b.shape}")
+    if not (np.all(np.isfinite(a)) and np.all(np.isfinite(b))):
+        return float("inf")
+    ref = float(np.linalg.norm(b))
+    err = float(np.linalg.norm(a - b))
+    if ref == 0.0:
+        return 0.0 if err == 0.0 else float("inf")
+    return err / ref
+
+
+def nonfinite_fraction(tree) -> float:
+    """Fraction of non-finite elements across a (host-side) pytree — the
+    frame statistic behind the overflow-storm detector's direct signal."""
+    import jax
+
+    total = 0
+    bad = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(x)
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        total += arr.size
+        bad += int(np.count_nonzero(~np.isfinite(arr)))
+    return bad / total if total else 0.0
+
+
+class ShadowSampler:
+    """Deterministic rate sampler over a monotone admission counter.
+
+    Keeps request ``n`` iff ``floor((n+1) * rate) > floor(n * rate)`` —
+    exactly ``rate`` of traffic in the long run, the *same* requests every
+    run, and no state beyond the counter (so two services fed the same
+    burst shadow the same members)."""
+
+    def __init__(self, rate: float):
+        if not (0.0 <= rate <= 1.0):
+            raise ValueError(f"shadow rate must be in [0, 1], got {rate}")
+        self.rate = float(rate)
+        self._n = 0
+
+    def pick(self) -> bool:
+        n = self._n
+        self._n += 1
+        if self.rate <= 0.0:
+            return False
+        return math.floor((n + 1) * self.rate) > math.floor(n * self.rate)
+
+
+class ShadowJob:
+    """One sampled request's replayable workload, captured at admission.
+
+    ``state0`` is a host-side numpy copy taken before the request ever
+    enters a bucket; ``sim`` is the request's own Simulation (static
+    config), from which :meth:`replay` derives the f32 oracle twin.
+    """
+
+    def __init__(self, request_id: int, sim, state0, steps: int, offset: float):
+        import jax
+
+        self.request_id = int(request_id)
+        self.sim = sim
+        self.state0 = jax.tree_util.tree_map(
+            lambda x: np.array(x, copy=True), state0
+        )
+        self.steps = int(steps)
+        self.offset = float(offset)
+
+    @classmethod
+    def capture(cls, rec) -> "ShadowJob":
+        """Snapshot a just-admitted RequestRecord (its ``state`` is still
+        the initial condition at that point)."""
+        stepper, cfg = rec.sim.stepper, rec.sim.cfg
+        return cls(rec.id, rec.sim, rec.state, rec.steps, stepper.metric_offset(cfg))
+
+    def replay(self, primary_state) -> float:
+        """Run the f32 oracle over the captured workload and return the
+        rel-L2 drift of ``primary_state`` (the served final state) from it.
+        Packed served states are unpacked first — the comparison is always
+        between decoded values."""
+        from repro.pack import is_packed, unpack_state
+
+        res = self.sim.oracle_replay(self.steps, state0=self.state0)
+        if is_packed(primary_state):
+            primary_state = unpack_state(primary_state)
+        return rel_l2(primary_state, res.state, offset=self.offset)

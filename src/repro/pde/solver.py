@@ -398,6 +398,36 @@ class Simulation:
             tracker = site_tracker_init(sites, prec.fmt, k0=policy.k_array(sites))
         return prec, tracker
 
+    # -- f32 oracle (shadow replay) ------------------------------------------
+
+    def oracle(self) -> "Simulation":
+        """This simulation's f32 oracle twin: same stepper and config,
+        reference arithmetic. The health plane's shadow sampler replays
+        service requests through it to measure live drift (DESIGN.md §16)."""
+        return Simulation(self.stepper, self.cfg, PrecisionConfig(mode="f32"))
+
+    def oracle_replay(
+        self,
+        steps: int,
+        *,
+        state0=None,
+        snapshot_every: Optional[int] = None,
+    ) -> SimResult:
+        """Replay a workload at f32 on the reference plane — the shadow
+        oracle of :mod:`repro.obs.shadow`.
+
+        This is an entirely separate program over copies of the inputs: it
+        shares no carried state, tracker or compiled executable with the
+        primary run, which is why shadow sampling is passive (the primary
+        path is bit-identical with shadowing on or off; proven in
+        ``tests/test_health.py``)."""
+        return self.oracle().run(
+            steps,
+            snapshot_every=snapshot_every,
+            state0=state0,
+            execution="reference",
+        )
+
     # -- single run ---------------------------------------------------------
 
     def run(

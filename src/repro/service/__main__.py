@@ -10,6 +10,11 @@ occupancy line shows it), different precisions/steppers land in sibling
 buckets — then drives the service to idle and prints one line per request
 plus the metrics report. Exit status 0 only if every admitted request
 completed — the CI-friendly smoke gate for the serving plane.
+
+``--health`` additionally runs the burst under the
+:mod:`repro.obs.health` monitor (shadow-oracle sampling at ``--shadow-rate``,
+anomaly detectors, SLO rules) and makes ANY health alert a nonzero exit —
+the headless alerting contract (DESIGN.md §16).
 """
 
 from __future__ import annotations
@@ -38,11 +43,25 @@ def main(argv=None) -> int:
     ap.add_argument("--max-bucket", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced burst for the CI fast tier")
+    ap.add_argument("--health", action="store_true",
+                    help="run under the repro.obs.health monitor; any alert "
+                         "makes the exit status nonzero")
+    ap.add_argument("--shadow-rate", type=float, default=0.25,
+                    help="--health shadow-oracle sampling rate")
     args = ap.parse_args(argv)
 
     names = args.steppers.split(",") if args.steppers else known_steppers()
     steps = 48 if args.smoke else args.steps
     precs = ("f32", "rr_tracked") if args.smoke else tuple(args.precisions.split(","))
+
+    monitor = None
+    if args.health:
+        import repro.obs as obs
+        import repro.obs.health as health
+
+        if not obs.enabled():
+            obs.enable(sample=1.0)
+        monitor = health.enable(shadow_rate=args.shadow_rate)
 
     svc = SimService(ServiceConfig(max_bucket=args.max_bucket, max_queue=1024))
     handles = []
@@ -85,6 +104,15 @@ def main(argv=None) -> int:
 
     print()
     print(svc.metrics.report())
+    if monitor is not None:
+        v = monitor.verdict()
+        print(f"health: {v['status']} — {v['alerts']['total']} alert(s), "
+              f"shadow sampled {v['shadow']['sampled']} "
+              f"(burn {v['shadow']['burn']})")
+        for a in monitor.alerts:
+            print(f"  {a}")
+        if monitor.alerts:
+            return 3  # headless alerting contract: alerts are a nonzero exit
     return 0 if ok else 2
 
 

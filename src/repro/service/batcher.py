@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.obs as obs
+import repro.obs.health as health
 from repro.dist.sharding import active_mesh
 
 from .metrics import ServiceMetrics
@@ -188,6 +189,7 @@ class Bucket:
             )
             dt = time.perf_counter() - t0
         metrics.observe_chunk(self.key, n, chunk, dt, compiled=fresh)
+        mon = health.active()
 
         drained: List[RequestRecord] = []
         for i, m in enumerate(self.members):
@@ -197,6 +199,8 @@ class Bucket:
                 obs.record_tracker(
                     f"req{m.id}:{m.key.stepper}", m.tracker, m.elapsed + chunk
                 )
+                if mon is not None:
+                    mon.on_tracker(m, chunk)
             m.elapsed += chunk
             m.chunks += 1
             if m.snapshot_due():
@@ -207,12 +211,21 @@ class Bucket:
                 m.snapshots.append((m.elapsed, snap))
                 m.stream.emit("snapshot", m.elapsed, snap)
                 metrics.snapshots_emitted += 1
+                if mon is not None:
+                    mon.observe_frame(m, snap)
             if m.remaining == 0:
                 drained.append(m)
+
+        # chunk-boundary health evaluation AFTER the member updates, so the
+        # detectors see the telemetry this chunk just drained
+        if mon is not None:
+            mon.on_chunk(self.key, n, chunk, dt, compiled=fresh)
 
         for m in drained:
             self.members.remove(m)
             self._finalize(m, metrics)
+            if mon is not None:
+                mon.on_request_done(m)
         return drained
 
     @staticmethod

@@ -43,6 +43,7 @@ from typing import Deque, Dict, List, Optional
 import jax
 
 import repro.obs as obs
+import repro.obs.health as health
 from repro.ckpt import checkpoint as ckpt
 
 from .batcher import Bucket, ChunkCompiler
@@ -116,6 +117,9 @@ class SimService:
         self._queue.append(rec)
         self._requests[rec.id] = rec
         self.metrics.submitted += 1
+        mon = health.active()
+        if mon is not None:
+            mon.on_submit(rec)  # deterministic shadow-sampling decision
         obs.instant(
             "request.submit",
             request=rec.id,
@@ -142,6 +146,9 @@ class SimService:
             if sp is not None:
                 sp["bucket"] = bucket.key.short()
                 sp["members"] = len(bucket)
+            mon = health.active()
+            if mon is not None:
+                mon.note_occupancy(self.queued, self.active_members)
             try:
                 drained = bucket.advance(
                     self._compiler, self.metrics, sharded=self.config.sharded
@@ -154,6 +161,8 @@ class SimService:
                     m.stream.emit("failed", m.elapsed, repr(e))
                     self.metrics.failed += 1
                     self._retire(m)
+                    if mon is not None:
+                        mon.on_request_failed(m, repr(e))
                 raise
             for m in drained:
                 self._retire(m)

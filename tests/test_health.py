@@ -1,0 +1,518 @@
+"""repro.obs.health — the live numerics-health monitoring plane (DESIGN.md §16).
+
+Covers the ISSUE-10 contract: the histogram-quantile estimator against
+known bucket layouts, detector math (overflow-storm grow rates, k-thrash
+reversals, coverage floor) with fire-once semantics, alert DETERMINISM
+(same telemetry stream -> same alert sequence, offline replay == the live
+monitor's incremental sweep, no wall-clock dependence), SLO rising-edge
+evaluation, the bounded flight recorder's ring + dump round-trip, the
+deterministic shadow sampler and rel-L2 drift metric, PASSIVITY (served
+request states/snapshots/tracker bits identical with health enabled vs
+disabled on heat1d + swe2d across all three execution planes), an
+in-process overflow storm from a starved pinned policy, and the fleet
+reporter's graceful degradation on partial artifacts."""
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.obs as obs
+import repro.obs.health as health
+from repro.core.policy import PRESETS
+from repro.obs.__main__ import report_trace, run_report
+from repro.obs.flightrec import FlightRecorder, load_flightrec
+from repro.obs.health import (
+    Alert,
+    HealthConfig,
+    HealthMonitor,
+    SLORule,
+    detect_series,
+    run_detectors,
+)
+from repro.obs.metrics import MetricsRegistry, histogram_quantile
+from repro.obs.precision import PrecisionTelemetry, SiteSeries
+from repro.obs.server import _sanitize
+from repro.obs.shadow import ShadowSampler, nonfinite_fraction, rel_l2
+from repro.obs.trace import Tracer
+from repro.service import ServiceConfig, SimRequest, SimService, scaled_state0
+
+TRACKED = dataclasses.replace(PRESETS["r2f2_16"], mode="rr_tracked")
+
+#: small grids for the served passivity matrix (mirrors tests/test_obs.py)
+SMALL_OV = {
+    "heat1d": {"nx": 64},
+    "swe2d": {"nx": 32, "ny": 32},
+}
+
+
+@pytest.fixture(autouse=True)
+def _health_off():
+    """Every test starts and ends with the monitor and obs disabled."""
+    health.disable()
+    obs.disable()
+    yield
+    health.disable()
+    obs.disable()
+
+
+def assert_bits_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype
+    if a.dtype == np.float32:
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+    else:
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# histogram quantile: known bucket layouts
+# ---------------------------------------------------------------------------
+
+
+class TestHistogramQuantile:
+    # 100 observations: 25 in (0, .1], 25 in (.1, .25], 50 in (.25, .5]
+    BUCKETS = [(0.1, 25), (0.25, 50), (0.5, 100)]
+
+    def test_interpolation_inside_buckets(self):
+        assert histogram_quantile(0.10, self.BUCKETS, 100) == pytest.approx(0.04)
+        assert histogram_quantile(0.25, self.BUCKETS, 100) == pytest.approx(0.1)
+        assert histogram_quantile(0.50, self.BUCKETS, 100) == pytest.approx(0.25)
+        assert histogram_quantile(0.75, self.BUCKETS, 100) == pytest.approx(0.375)
+        assert histogram_quantile(1.00, self.BUCKETS, 100) == pytest.approx(0.5)
+
+    def test_rank_past_last_finite_bucket_clamps(self):
+        # 5 of 10 observations landed past every finite bound (+Inf bucket):
+        # the estimate never invents mass above the largest finite le
+        assert histogram_quantile(0.9, [(0.1, 5)], 10) == pytest.approx(0.1)
+
+    def test_no_data_and_bad_q_are_nan(self):
+        assert math.isnan(histogram_quantile(0.5, [], 0))
+        assert math.isnan(histogram_quantile(0.5, [(1.0, 0)], 0))
+        assert math.isnan(histogram_quantile(-0.1, self.BUCKETS, 100))
+        assert math.isnan(histogram_quantile(1.1, self.BUCKETS, 100))
+
+    def test_histogram_method_matches_module_function(self):
+        h = MetricsRegistry().histogram("h", "", buckets=(0.1, 0.25, 0.5))
+        for v in [0.05] * 25 + [0.2] * 25 + [0.4] * 50:
+            h.observe(v, plane="a")
+        snap = h.snapshot(plane="a")
+        for q in (0.1, 0.5, 0.9):
+            assert h.quantile(q, plane="a") == pytest.approx(
+                histogram_quantile(q, snap["buckets"], snap["count"])
+            )
+
+    def test_aggregate_quantile_merges_label_sets(self):
+        h = MetricsRegistry().histogram("h", "", buckets=(1.0, 2.0, 4.0))
+        for v in (0.5, 1.5):
+            h.observe(v, plane="a")
+        for v in (3.0, 3.5):
+            h.observe(v, plane="b")
+        # merged cumulative counts: [(1,1), (2,2), (4,4)], count 4
+        assert h.quantile(0.5) == pytest.approx(
+            histogram_quantile(0.5, [(1.0, 1), (2.0, 2), (4.0, 4)], 4)
+        )
+        assert math.isnan(h.quantile(0.5, plane="missing"))
+
+
+# ---------------------------------------------------------------------------
+# detectors: math + fire-once + determinism
+# ---------------------------------------------------------------------------
+
+
+def _series(scope="svc", site="site", steps=(), k=(), grew=(), shrank=(),
+            coverage=None):
+    return SiteSeries.from_dict({
+        "scope": scope, "site": site, "steps": list(steps), "k": list(k),
+        "grew": list(grew), "shrank": list(shrank), "coverage": coverage,
+    })
+
+
+class TestDetectors:
+    CFG = HealthConfig(window=8, grow_rate=0.25, grow_min_events=4,
+                       thrash_reversals=3, coverage_min=0.9)
+
+    def test_overflow_storm_on_grow_rate(self):
+        # cumulative §5.3 grow counters: 8 grow events over 32 steps = the
+        # 0.25 threshold, first reached at the step-32 boundary
+        s = _series(steps=[8, 16, 24, 32], k=[2, 2, 2, 2],
+                    grew=[0, 0, 4, 8], shrank=[0, 0, 0, 0])
+        alerts = detect_series(s, self.CFG)
+        assert [a.kind for a in alerts] == ["overflow_storm"]
+        assert alerts[0].step == 32
+        assert alerts[0].detail["signal"] == "grow_rate"
+        assert alerts[0].detail["rate"] == pytest.approx(8 / 32)
+
+    def test_storm_needs_minimum_events(self):
+        # 1 grow in 4 steps is a 0.25 *rate* but only one event — silence
+        s = _series(steps=[4], k=[2], grew=[1], shrank=[0])
+        assert detect_series(s, self.CFG) == []
+
+    def test_storm_fires_once_per_series(self):
+        s = _series(steps=[8, 16, 24, 32, 40, 48], k=[2] * 6,
+                    grew=[0, 0, 4, 8, 12, 16], shrank=[0] * 6)
+        kinds = [a.kind for a in detect_series(s, self.CFG)]
+        assert kinds == ["overflow_storm"]
+
+    def test_k_thrash_on_reversals(self):
+        # k 3->2->3->2->3: three direction reversals inside one window
+        s = _series(steps=[8, 16, 24, 32, 40], k=[3, 2, 3, 2, 3],
+                    grew=[0, 0, 1, 1, 2], shrank=[0, 1, 1, 2, 2])
+        alerts = detect_series(s, self.CFG)
+        assert [a.kind for a in alerts] == ["k_thrash"]
+        assert alerts[0].detail["reversals"] == 3
+
+    def test_monotone_k_never_thrashes(self):
+        s = _series(steps=[8, 16, 24, 32], k=[0, 1, 2, 3],
+                    grew=[1, 2, 3, 4], shrank=[0, 0, 0, 0])
+        assert all(a.kind != "k_thrash" for a in detect_series(s, self.CFG))
+
+    def test_coverage_drop_below_floor(self):
+        s = _series(steps=[8, 16], k=[2, 2], grew=[0, 0], shrank=[0, 0],
+                    coverage=0.5)
+        alerts = detect_series(s, self.CFG)
+        assert [a.kind for a in alerts] == ["coverage_drop"]
+        assert alerts[0].step == 16
+        ok = _series(steps=[8, 16], k=[2, 2], grew=[0, 0], shrank=[0, 0],
+                     coverage=0.95)
+        assert detect_series(ok, self.CFG) == []
+
+    def test_same_stream_same_alert_sequence(self):
+        """The whole determinism contract: replaying the identical telemetry
+        gives the identical alert list (steps, kinds, details — no wall
+        clock anywhere in a detector)."""
+        tel = PrecisionTelemetry()
+        for site, ks, gs in (
+            ("a", [3, 2, 3, 2, 3], [0, 0, 1, 1, 2]),
+            ("b", [2, 2, 2, 2, 2], [0, 4, 8, 12, 16]),
+        ):
+            s = tel.series("svc", site)
+            for i, (k, g) in enumerate(zip(ks, gs)):
+                s.append((i + 1) * 8, k, g, 0)
+        first = run_detectors(tel, self.CFG)
+        second = run_detectors(tel, self.CFG)
+        assert first == second
+        assert [a.kind for a in first] == ["k_thrash", "overflow_storm"]
+
+    def test_live_sweep_equals_offline_replay(self, tmp_path):
+        """The live monitor emits incrementally (suffix per sweep) as the
+        stream grows; the accumulated sequence must equal one offline pass
+        over the final stream — however the chunking falls."""
+        cfg = dataclasses.replace(self.CFG, flight_dir=str(tmp_path))
+        ks = [3, 2, 3, 2, 3, 3, 3]
+        gs = [0, 0, 1, 1, 2, 6, 14]  # 14 grow events over 56 steps: rate 0.25
+
+        def live(chunking):
+            obs.enable(sample=0.0)
+            mon = HealthMonitor(cfg)
+            s = obs.active().telemetry.series("svc", "a")
+            i = 0
+            for n in chunking:
+                for _ in range(n):
+                    s.append((i + 1) * 8, ks[i], gs[i], 0)
+                    i += 1
+                mon.sweep()
+            got = list(mon.alerts)
+            obs.disable()
+            return got
+
+        offline = PrecisionTelemetry()
+        sr = offline.series("svc", "a")
+        for i, (k, g) in enumerate(zip(ks, gs)):
+            sr.append((i + 1) * 8, k, g, 0)
+        expected = run_detectors(offline, self.CFG)
+        assert [a.kind for a in expected] == ["k_thrash", "overflow_storm"]
+        # one sample per sweep, everything in one sweep, uneven chunks:
+        # the emitted sequence never depends on where the sweeps landed
+        assert live([1] * 7) == expected
+        assert live([7]) == expected
+        assert live([2, 3, 2]) == expected
+
+
+# ---------------------------------------------------------------------------
+# SLO rules: schema + rising-edge evaluation
+# ---------------------------------------------------------------------------
+
+
+class _Key:
+    def short(self):
+        return "bucket"
+
+
+class TestSLORules:
+    def test_op_validation(self):
+        with pytest.raises(ValueError):
+            SLORule("x", "queue_depth", "<", 1.0)
+        with pytest.raises(ValueError):
+            SLORule("x", "queue_depth", "<=", 1.0, window=0)
+
+    def test_ok_directions_and_nan(self):
+        lo = SLORule("lo", "m", "<=", 2.0)
+        hi = SLORule("hi", "m", ">=", 2.0)
+        assert lo.ok(2.0) and not lo.ok(2.1)
+        assert hi.ok(2.0) and not hi.ok(1.9)
+        assert lo.ok(float("nan")) and hi.ok(float("nan"))  # no data, no breach
+
+    def test_round_trips_through_dict(self):
+        r = SLORule("q", "queue_depth", "<=", 4.0, window=16)
+        assert SLORule.from_dict(r.to_dict()) == r
+
+    def test_breach_fires_on_rising_edge_only(self, tmp_path):
+        obs.enable(sample=0.0)
+        mon = HealthMonitor(HealthConfig(
+            slos=(SLORule("queue", "queue_depth", "<=", 2.0),),
+            flight_dir=str(tmp_path),
+        ))
+        key = _Key()
+        mon.note_occupancy(queued=5, active=0)
+        mon.on_chunk(key, 1, 8, 1e-4, compiled=False)
+        mon.on_chunk(key, 1, 8, 1e-4, compiled=False)  # still breached: no dup
+        assert [a.kind for a in mon.alerts] == ["slo_breach"]
+        assert mon.alerts[0].scope == "queue"
+        mon.note_occupancy(queued=0, active=0)
+        mon.on_chunk(key, 1, 8, 1e-4, compiled=False)  # recovers
+        mon.note_occupancy(queued=9, active=0)
+        mon.on_chunk(key, 1, 8, 1e-4, compiled=False)  # breaches again
+        assert [a.kind for a in mon.alerts] == ["slo_breach", "slo_breach"]
+        assert mon.verdict()["slo"]["queue"]["ok"] is False
+
+    def test_latency_slo_reads_the_bucket_quantile(self, tmp_path):
+        obs.enable(sample=0.0)
+        mon = HealthMonitor(HealthConfig(
+            slos=(SLORule("lat", "chunk_latency_p99_us", "<=", 1.0),),
+            flight_dir=str(tmp_path),
+        ))
+        hist = obs.active().registry.histogram(
+            "repro_service_chunk_latency_seconds"
+        )
+        hist.observe(0.5)  # 0.5 s >> 1 µs threshold
+        mon.on_chunk(_Key(), 1, 8, 0.5, compiled=False)
+        assert [a.kind for a in mon.alerts] == ["slo_breach"]
+        assert mon.alerts[0].detail["value"] == pytest.approx(
+            hist.quantile(0.99) * 1e6
+        )
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: bounded ring + dump round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestFlightRecorder:
+    def test_ring_keeps_the_tail_with_monotone_seq(self):
+        fr = FlightRecorder(capacity=4)
+        for i in range(10):
+            fr.record("ev", i=i)
+        assert fr.recorded == 10
+        events = fr.events()
+        assert len(events) == 4
+        assert [e["i"] for e in events] == [6, 7, 8, 9]
+        seqs = [e["seq"] for e in events]
+        assert seqs == sorted(seqs) and len(set(seqs)) == 4
+
+    def test_dump_load_round_trip(self, tmp_path):
+        fr = FlightRecorder(capacity=8)
+        fr.record("submit", request=1)
+        fr.record("alert", alert={"kind": "overflow_storm"})
+        path = fr.dump(str(tmp_path), "overflow_storm",
+                       metrics={"m": 1}, verdict={"status": "alerting"})
+        assert os.path.basename(path).endswith("-overflow_storm.json")
+        doc = load_flightrec(path)
+        assert doc["reason"] == "overflow_storm"
+        assert doc["recorded"] == 2
+        assert [e["kind"] for e in doc["events"]] == ["submit", "alert"]
+        assert doc["metrics"] == {"m": 1}
+        assert doc["verdict"]["status"] == "alerting"
+
+    def test_load_rejects_bad_schema_and_seq(self, tmp_path):
+        fr = FlightRecorder(capacity=8)
+        fr.record("ev")
+        path = fr.dump(str(tmp_path), "ok")
+        doc = json.load(open(path))
+        doc["schema"] = "bogus@9"
+        bad1 = tmp_path / "bad_schema.json"
+        bad1.write_text(json.dumps(doc))
+        with pytest.raises(ValueError):
+            load_flightrec(str(bad1))
+        doc = json.load(open(path))
+        doc["events"] = [{"seq": 2, "kind": "a"}, {"seq": 1, "kind": "b"}]
+        bad2 = tmp_path / "bad_seq.json"
+        bad2.write_text(json.dumps(doc))
+        with pytest.raises(ValueError):
+            load_flightrec(str(bad2))
+
+
+# ---------------------------------------------------------------------------
+# shadow sampling: deterministic picks, drift metric
+# ---------------------------------------------------------------------------
+
+
+class TestShadow:
+    def test_sampler_follows_the_floor_rule(self):
+        s = ShadowSampler(0.3)
+        picks = [s.pick() for _ in range(20)]
+        expected = [
+            math.floor((n + 1) * 0.3) > math.floor(n * 0.3) for n in range(20)
+        ]
+        assert picks == expected
+        assert sum(picks) == 6  # exactly the rate over the long run
+
+    def test_sampler_is_replayable_and_bounded(self):
+        sa, sb = ShadowSampler(0.5), ShadowSampler(0.5)
+        assert [sa.pick() for _ in range(10)] == [sb.pick() for _ in range(10)]
+        never, always = ShadowSampler(0.0), ShadowSampler(1.0)
+        assert not any(never.pick() for _ in range(10))
+        assert all(always.pick() for _ in range(10))
+        with pytest.raises(ValueError):
+            ShadowSampler(1.5)
+
+    def test_rel_l2_known_values(self):
+        b = {"u": np.array([3.0, 4.0], np.float32)}
+        assert rel_l2(b, b) == 0.0
+        a = {"u": np.array([3.0, 4.0 + 5.0], np.float32)}
+        assert rel_l2(a, b) == pytest.approx(1.0)  # |err|=5 over |ref|=5
+
+    def test_rel_l2_offset_removes_the_baseline(self):
+        # a resting-depth style additive baseline must not dilute the drift
+        base = np.array([10.0, 10.0], np.float64)
+        a, b = {"h": base + [0.0, 2.0]}, {"h": base + [0.0, 1.0]}
+        assert rel_l2(a, b, offset=10.0) == pytest.approx(1.0)
+
+    def test_rel_l2_nonfinite_is_inf(self):
+        b = {"u": np.array([1.0, 2.0], np.float32)}
+        a = {"u": np.array([1.0, np.inf], np.float32)}
+        assert rel_l2(a, b) == float("inf")
+        assert rel_l2(b, a) == float("inf")
+
+    def test_nonfinite_fraction_floats_only(self):
+        tree = {
+            "u": np.array([1.0, np.nan, np.inf, 4.0], np.float32),
+            "k": np.array([1, 2, 3, 4], np.int32),  # ints never count
+        }
+        assert nonfinite_fraction(tree) == pytest.approx(0.5)
+        assert nonfinite_fraction({"k": np.arange(3)}) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# passivity: served bits identical with health enabled vs disabled
+# ---------------------------------------------------------------------------
+
+
+def _serve(name, execution, tmp_path=None, shadowed=False):
+    if shadowed:
+        obs.enable(sample=1.0)
+        health.enable(shadow_rate=1.0, flight_dir=str(tmp_path))
+    svc = SimService(ServiceConfig(max_bucket=4))
+    ov = SMALL_OV[name]
+    handles = [
+        svc.submit(SimRequest(
+            name, steps=16, precision=TRACKED, overrides=ov,
+            snapshot_every=8, execution=execution,
+            state0=scaled_state0(name, 0.6 + 0.2 * i, overrides=ov),
+        ))
+        for i in range(2)
+    ]
+    svc.run_until_idle()
+    results = [h.result() for h in handles]
+    monitor = health.active()
+    health.disable()
+    obs.disable()
+    return results, monitor
+
+
+class TestServicePassivity:
+    @pytest.mark.parametrize("name", ["heat1d", "swe2d"])
+    @pytest.mark.parametrize("execution", ["reference", "fused", "megakernel"])
+    def test_served_bits_identical_under_health(self, name, execution, tmp_path):
+        base, _ = _serve(name, execution)
+        inst, monitor = _serve(name, execution, tmp_path, shadowed=True)
+        # health really was live: every request shadow-replayed, none alerted
+        assert len(monitor.shadow_rel) == 2
+        assert monitor.alerts == []
+        assert all(rel <= monitor.config.err_budget
+                   for rel in monitor.shadow_rel.values())
+        for b, i in zip(base, inst):
+            jax.tree_util.tree_map(assert_bits_equal, b.state, i.state)
+            assert b.snapshot_steps == i.snapshot_steps
+            for sb, si in zip(b.snapshots, i.snapshots):
+                jax.tree_util.tree_map(assert_bits_equal, sb, si)
+            np.testing.assert_array_equal(
+                np.asarray(b.tracker.state.k), np.asarray(i.tracker.state.k)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(b.tracker.state.overflow_steps),
+                np.asarray(i.tracker.state.overflow_steps),
+            )
+            assert b.final_k == i.final_k
+
+
+# ---------------------------------------------------------------------------
+# the induced storm: starved pinned policy vs hot traffic
+# ---------------------------------------------------------------------------
+
+
+class TestOverflowStorm:
+    def test_starved_pinned_policy_fires_and_dumps(self, tmp_path):
+        obs.enable(sample=1.0)
+        monitor = health.enable(flight_dir=str(tmp_path))
+        svc = SimService()
+        handles = health._storm_burst(svc, members=1)
+        svc.run_until_idle()
+        health.disable()
+        obs.disable()
+
+        assert all(h.status == "done" for h in handles)  # overflow, not crash
+        storms = [a for a in monitor.alerts if a.kind == "overflow_storm"]
+        assert storms, "starved pinned policy must raise an overflow storm"
+        assert storms[0].detail["signal"] == "nonfinite"
+        assert storms[0].detail["fraction"] > 0
+        assert monitor.verdict()["status"] == "alerting"
+        assert monitor.dump_paths
+        doc = load_flightrec(monitor.dump_paths[0])
+        assert doc["reason"] == "overflow_storm"
+        kinds = {e["kind"] for e in doc["events"]}
+        assert "alert" in kinds and "submit" in kinds
+
+
+# ---------------------------------------------------------------------------
+# verdict JSON + reporter degradation (satellite coverage)
+# ---------------------------------------------------------------------------
+
+
+class TestVerdictAndReporter:
+    def test_verdict_sanitizes_to_strict_json(self, tmp_path):
+        obs.enable(sample=0.0)
+        mon = HealthMonitor(HealthConfig(flight_dir=str(tmp_path)))
+        v = _sanitize(mon.verdict())  # burn is NaN with no shadow data yet
+        text = json.dumps(v, allow_nan=False)  # must not raise
+        assert json.loads(text)["status"] == "ok"
+        assert json.loads(text)["shadow"]["burn"] is None
+
+    def test_reporter_degrades_on_partial_artifacts(self, tmp_path, capsys):
+        reg = MetricsRegistry()
+        reg.counter("repro_x_total", "x").inc()
+        reg.save(prom_path=str(tmp_path / "metrics.prom"))
+        (tmp_path / "telemetry.json").write_text("{not json")
+        assert run_report(str(tmp_path), top=5) == 0
+        out = capsys.readouterr().out
+        assert "telemetry.json: unreadable" in out
+        assert "trace.json: not found" in out
+        assert "repro_x_total" in out
+
+    def test_reporter_fails_with_nothing_loadable(self, tmp_path):
+        (tmp_path / "trace.json").write_text("{not json")
+        assert run_report(str(tmp_path), top=5) == 1
+
+    def test_reporter_surfaces_dropped_spans(self, tmp_path):
+        tr = Tracer(sample=1.0, capacity=2)
+        for i in range(5):
+            with tr.span(f"s{i}"):
+                pass
+        path = tr.save(str(tmp_path / "trace.json"))
+        lines = "\n".join(report_trace(path))
+        assert "3 dropped past capacity" in lines
+        assert "WARNING" in lines
